@@ -1,0 +1,52 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+OUT_DIR = Path(__file__).resolve().parent.parent / "bench_out"
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3):
+    """Median wall seconds of fn(*args) with block_until_ready."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def run_with_devices(code: str, n_devices: int, *, timeout: int = 1200,
+                     x64: bool = True) -> str:
+    """Run a snippet under --xla_force_host_platform_device_count=N."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    prelude = "import jax\n"
+    if x64:
+        prelude += 'jax.config.update("jax_enable_x64", True)\n'
+    proc = subprocess.run([sys.executable, "-c", prelude + code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-3000:])
+    return proc.stdout
+
+
+def write_csv(name: str, header: list[str], rows: list[list]):
+    OUT_DIR.mkdir(exist_ok=True)
+    path = OUT_DIR / name
+    with path.open("w") as f:
+        f.write(",".join(header) + "\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+    return path

@@ -1,0 +1,111 @@
+"""Figures 7 & 8: speedup curves per matrix size + average speedup.
+
+Two views:
+  * measured: T_s / T_p from table3.csv (on this 1-core container these show
+    partitioning overhead, not parallelism — documented);
+  * modeled: the paper-cluster model.  Per eliminated row,
+      MC:  compute 2*N*m/P flops + 1 broadcast of m doubles
+      GE:  compute + argmax allreduce + 2 broadcasts of m doubles
+    with the paper's constants (640 GFLOP/s nodes, ~5 GB/s IB, ~1.5 us
+    latency), producing the speedup shape the paper measured (MC > GE, both
+    degrading past ~16-32 procs at small N).
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+from collections import defaultdict
+from pathlib import Path
+
+from benchmarks._common import OUT_DIR, write_csv
+
+# paper-era cluster constants (Table 2: dual Xeon E5-2650v3 nodes, IB)
+FLOPS = 640e9 / 20     # per MPI rank (20 ranks/node)
+BW = 5e9               # bytes/s effective per link (FDR IB, shared)
+LAT = 3e-6             # per-message latency, seconds
+
+
+def model_time(N: int, P: int, alg: str) -> float:
+    """Total modeled seconds for N x N on P ranks."""
+    t = 0.0
+    # distributed phase: N - P rows (MC) / N rows (GE); live width shrinks
+    comp = 0.0
+    comm = 0.0
+    rows = N - P if alg == "mc" else N
+    for i in range(rows):
+        m = N - i
+        comp += 2.0 * m * max(N - i, 1) / P / FLOPS      # rank-1 update share
+        if P > 1:
+            if alg == "mc":
+                comm += LAT + 8.0 * m / BW                # 1 bcast
+            else:
+                comm += 3 * LAT + 2 * 8.0 * m / BW + 8.0 * P / BW  # argmax+2
+    t = comp + comm
+    if alg == "mc" and P > 1:
+        t += 2.0 * P * P * P / 3 / FLOPS + LAT + 8.0 * P * P / BW  # tail
+    return t
+
+
+def modeled_speedups(sizes, procs):
+    rows = []
+    for N in sizes:
+        t1 = model_time(N, 1, "mc")
+        for P in procs:
+            for alg in ("mc", "ge"):
+                rows.append([N, P, alg, t1 / model_time(N, P, alg)])
+    return rows
+
+
+def measured_speedups(table3_csv: Path):
+    by = {}
+    with table3_csv.open() as f:
+        for row in csv.DictReader(f):
+            by[(int(row["N"]), int(row["procs"]), row["method"])] = \
+                float(row["seconds"])
+    sizes = sorted({k[0] for k in by})
+    procs = sorted({k[1] for k in by if k[1] > 1} | {1})
+    rows = []
+    for N in sizes:
+        serials = [v for (n, p, m), v in by.items()
+                   if n == N and p == 1 and m in ("mc", "ge")]
+        if not serials:
+            continue
+        ts = min(serials)
+        for P in procs:
+            for m in ("pmc", "pge", "plu"):
+                if (N, P, m) in by:
+                    rows.append([N, P, m, ts / by[(N, P, m)]])
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default="1000,2000,4000,8000")
+    ap.add_argument("--procs", default="1,2,4,8,16,32,64,128")
+    args = ap.parse_args(argv)
+    sizes = [int(x) for x in args.sizes.split(",")]
+    procs = [int(x) for x in args.procs.split(",")]
+
+    rows = modeled_speedups(sizes, procs)
+    path = write_csv("fig7_modeled.csv", ["N", "procs", "alg", "speedup"], rows)
+    print(f"fig7 modeled -> {path}")
+    # fig8: average across sizes
+    agg = defaultdict(list)
+    for N, P, alg, s in rows:
+        agg[(P, alg)].append(s)
+    avg_rows = [[P, alg, sum(v) / len(v)] for (P, alg), v in sorted(agg.items())]
+    path8 = write_csv("fig8_modeled.csv", ["procs", "alg", "avg_speedup"], avg_rows)
+    for P, alg, s in avg_rows:
+        print(f"fig8_modeled,{alg},procs={P},avg_speedup={s:.2f}")
+
+    t3 = OUT_DIR / "table3.csv"
+    if t3.exists():
+        mrows = measured_speedups(t3)
+        write_csv("fig7_measured.csv", ["N", "procs", "alg", "speedup"], mrows)
+        for r in mrows:
+            print("fig7_measured", *r, sep=",")
+    return avg_rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Kernel-level benchmark: the condensation hot loop.
+
+On CPU the Pallas kernels run in interpret mode (correctness, not speed), so
+speed here is (a) the XLA-fused jnp path wall-time, and (b) the TPU
+projection from the kernel's exact byte/FLOP counts at v5e roofline:
+    rank-1:  (2*M*N flops, ~3*M*N*dtype bytes)  -> HBM-bound
+    rank-K:  (2*M*N*K flops, ~(2*M*N + M*K + K*N)*dtype bytes) -> MXU-bound
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks._common import timeit, write_csv
+
+HBM = 819e9
+PEAK = 197e12
+
+
+def main(argv=None):
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ref
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m", type=int, default=2048)
+    ap.add_argument("--n", type=int, default=2048)
+    args = ap.parse_args(argv)
+    m = n = args.m
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    pc = jnp.asarray(rng.standard_normal((m,)), jnp.float32)
+    pr = jnp.asarray(rng.standard_normal((n,)), jnp.float32)
+
+    rows = []
+    f1 = jax.jit(ref.rank1_update_ref)
+    t = timeit(f1, a, pc, pr)
+    proj = 3 * m * n * 4 / HBM
+    rows.append(["rank1_update", m, n, 0, f"{t*1e6:.0f}",
+                 f"{proj*1e6:.1f}", f"{2*m*n/proj/1e12:.2f}"])
+
+    for k in (32, 128, 256):
+        c = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        r = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+        fk = jax.jit(ref.panel_update_ref)
+        t = timeit(fk, a, c, r)
+        flops = 2 * m * n * k
+        bytes_ = (2 * m * n + m * k + k * n) * 4
+        proj = max(flops / PEAK, bytes_ / HBM)
+        rows.append(["panel_update", m, n, k, f"{t*1e6:.0f}",
+                     f"{proj*1e6:.1f}", f"{flops/proj/1e12:.2f}"])
+
+    path = write_csv("kernels.csv",
+                     ["kernel", "M", "N", "K", "cpu_us", "tpu_proj_us",
+                      "tpu_proj_tflops"], rows)
+    for r in rows:
+        print("kernel", *r, sep=",")
+    print(f"kernels -> {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

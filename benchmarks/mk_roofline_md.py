@@ -1,0 +1,66 @@
+"""Render the §Roofline markdown table from dryrun_results.jsonl and patch
+it into EXPERIMENTS.md (replaces the <!-- ROOFLINE_TABLE --> marker)."""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+LEVER = {
+    "compute": "more useful-FLOP fraction (less remat/mask waste)",
+    "memory": "fuse bandwidth-bound stages / bigger tiles",
+    "collective": "reshard or overlap collectives",
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="dryrun_results.jsonl")
+    ap.add_argument("--exp", default="EXPERIMENTS.md")
+    args = ap.parse_args(argv)
+
+    recs = {}
+    skips = []
+    for line in Path(args.results).read_text().splitlines():
+        try:
+            r = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        if r.get("mesh") != "16x16":
+            continue
+        if r.get("skipped"):
+            skips.append(r)
+        else:
+            recs[(r["arch"], r["shape"])] = r
+
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | bottleneck |"
+        " MODEL/HLO fl | peak GiB/dev | lever |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape), r in sorted(recs.items()):
+        bn = r["bottleneck"].replace("_s", "")
+        frac = min(r.get("useful_flops_frac", 0.0), 1.0)
+        lines.append(
+            f"| {arch} | {shape} | {r['compute_s']:.3g} | {r['memory_s']:.3g} "
+            f"| {r['collective_s']:.3g} | **{bn}** | {frac:.2f} "
+            f"| {r['memory']['peak_bytes_per_device']/2**30:.1f} "
+            f"| {LEVER[bn]} |")
+    for r in sorted(skips, key=lambda x: (x["arch"], x["shape"])):
+        lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | SKIP "
+                     f"| — | — | full attention: no sub-quadratic path |")
+    table = "\n".join(lines)
+
+    exp = Path(args.exp)
+    txt = exp.read_text()
+    marker = "<!-- ROOFLINE_TABLE -->"
+    if marker in txt:
+        txt = txt.replace(marker, "\n\n" + table + "\n")
+        exp.write_text(txt)
+        print(f"patched {exp} with {len(recs)} rows + {len(skips)} skips")
+    else:
+        print(table)
+
+
+if __name__ == "__main__":
+    main()

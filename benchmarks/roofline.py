@@ -1,0 +1,83 @@
+"""Roofline report: reads launch/dryrun.py results (dryrun_results.jsonl)
+and renders the §Roofline table (one row per arch x shape on the single-pod
+mesh): three terms in seconds, dominant bottleneck, MODEL_FLOPS/HLO_FLOPs,
+and a one-line lever per row.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from benchmarks._common import OUT_DIR, write_csv
+
+LEVERS = {
+    "compute_s": "raise MXU utilization: larger per-chip tiles / fewer remat "
+                 "recomputes (useful-FLOP fraction is the lever)",
+    "memory_s": "cut HBM traffic: fuse bandwidth-bound stages, bf16 "
+                "intermediates, larger arithmetic-intensity blocks",
+    "collective_s": "cut wire bytes: reshard to kill duplicate all-gathers, "
+                    "overlap collectives with compute, bf16 grad all-reduce",
+}
+
+
+def load(path: Path):
+    recs = []
+    for line in path.read_text().splitlines():
+        try:
+            recs.append(json.loads(line))
+        except json.JSONDecodeError:
+            pass
+    return recs
+
+
+def render(recs, mesh: str = "16x16"):
+    rows = []
+    seen = set()
+    for r in recs:
+        if r.get("mesh") != mesh or r.get("skipped"):
+            continue
+        key = (r["arch"], r["shape"])
+        if key in seen:
+            continue
+        seen.add(key)
+        frac = r.get("useful_flops_frac", 0.0)
+        rows.append([
+            r["arch"], r["shape"], r["kind"],
+            f"{r['compute_s']:.4g}", f"{r['memory_s']:.4g}",
+            f"{r['collective_s']:.4g}", r["bottleneck"].replace("_s", ""),
+            f"{r['model_flops']:.3e}", f"{r['hlo_flops_global']:.3e}",
+            f"{min(frac, 1.0):.2f}",
+            f"{r['memory']['peak_bytes_per_device'] / 2**30:.2f}",
+        ])
+    skips = [[r["arch"], r["shape"], "SKIP", r.get("reason", "")]
+             for r in recs if r.get("skipped") and r.get("mesh") == mesh]
+    return rows, skips
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="dryrun_results.jsonl")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args(argv)
+    path = Path(args.results)
+    if not path.exists():
+        print(f"roofline: {path} not found — run "
+              f"`python -m repro.launch.dryrun` first")
+        return []
+    recs = load(path)
+    rows, skips = render(recs, args.mesh)
+    header = ["arch", "shape", "kind", "compute_s", "memory_s",
+              "collective_s", "bottleneck", "model_flops", "hlo_flops",
+              "useful_frac", "peak_GiB_per_dev"]
+    out = write_csv("roofline.csv", header, rows)
+    print(f"roofline -> {out}")
+    for r in rows:
+        print("roofline", *r, sep=",")
+    for s in skips:
+        print("roofline_skip", *s[:3], sep=",")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

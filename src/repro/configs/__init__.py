@@ -1,0 +1,3 @@
+"""Architecture configs: one module per assigned arch (+ shapes + registry)."""
+from repro.configs.registry import ARCHS, get_config, arch_ids
+from repro.configs.shapes import SHAPES, SHAPE_NAMES, ShapeSpec

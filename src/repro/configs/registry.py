@@ -1,0 +1,86 @@
+"""Arch registry + input_specs (ShapeDtypeStruct stand-ins for every input).
+
+``input_specs(cfg, shape, kind)`` returns the exact pytree the corresponding
+step function is lowered with — weak-type-correct, shardable, no device
+allocation.  Used by launch/dryrun.py and the benchmarks.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import SHAPES, ShapeSpec
+from repro.models.common import ModelConfig
+
+_MODULES = {
+    "qwen2.5-3b": "repro.configs.qwen2_5_3b",
+    "qwen1.5-4b": "repro.configs.qwen1_5_4b",
+    "gemma3-1b": "repro.configs.gemma3_1b",
+    "phi3-mini-3.8b": "repro.configs.phi3_mini_3_8b",
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick",
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a2_7b",
+    "mamba2-370m": "repro.configs.mamba2_370m",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "llama-3.2-vision-11b": "repro.configs.llama32_vision_11b",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def arch_ids():
+    return ARCHS
+
+
+def _module(arch: str):
+    if arch not in _MODULES:
+        raise ValueError(f"unknown arch {arch!r}; known: {ARCHS}")
+    return importlib.import_module(_MODULES[arch])
+
+
+def get_config(arch: str, *, smoke: bool = False) -> ModelConfig:
+    mod = _module(arch)
+    return mod.smoke() if smoke else mod.full()
+
+
+def skip_shapes(arch: str) -> set:
+    return set(_module(arch).SKIP_SHAPES)
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int, *, kind: str) -> Dict:
+    """ShapeDtypeStructs for the model-input batch dict."""
+    sd = jax.ShapeDtypeStruct
+    tok = jnp.int32
+    specs: Dict = {}
+    if kind == "train":
+        specs["tokens"] = sd((batch, seq), tok)
+        specs["targets"] = sd((batch, seq), tok)
+    elif kind == "prefill":
+        specs["tokens"] = sd((batch, seq), tok)
+    elif kind == "decode":
+        specs["tokens"] = sd((batch, 1), tok)
+    else:
+        raise ValueError(kind)
+
+    if cfg.family == "encdec":
+        if kind == "decode":
+            specs["memory"] = sd((batch, cfg.enc_seq, cfg.d_model), cfg.dtype)
+        else:
+            specs["frames"] = sd((batch, cfg.enc_seq, cfg.d_model), cfg.dtype)
+    if cfg.family == "vlm":
+        specs["img_embeds"] = sd((batch, cfg.n_img_tokens, cfg.d_model), cfg.dtype)
+    return specs
+
+
+def input_specs(arch_or_cfg, shape_name: str, *, smoke: bool = False):
+    """(cfg, shape, batch-dict specs) for one (arch, shape) cell."""
+    if isinstance(arch_or_cfg, ModelConfig):
+        cfg = arch_or_cfg
+    else:
+        cfg = get_config(arch_or_cfg, smoke=smoke)
+    shape = SHAPES[shape_name]
+    specs = batch_specs(cfg, shape.global_batch, shape.seq_len, kind=shape.kind)
+    return cfg, shape, specs

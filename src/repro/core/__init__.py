@@ -1,0 +1,28 @@
+"""Core: the paper's contribution — distributed log-determinant via
+parallel matrix condensation, plus the baselines it is evaluated against."""
+
+from repro.core.api import slogdet, logdet, pad_to_multiple, METHODS
+from repro.core.condense import (
+    slogdet_condense,
+    slogdet_condense_staged,
+    condense_steps,
+    combine_slogdet,
+)
+from repro.core.blocked import (
+    slogdet_condense_blocked,
+    parallel_slogdet_mc_blocked,
+    panel_factor,
+    apply_panel,
+)
+from repro.core.gaussian import slogdet_ge, parallel_slogdet_ge
+from repro.core.parallel import parallel_slogdet_mc
+from repro.core.scalapack import parallel_slogdet_lu
+
+__all__ = [
+    "slogdet", "logdet", "pad_to_multiple", "METHODS",
+    "slogdet_condense", "slogdet_condense_staged", "condense_steps",
+    "combine_slogdet", "slogdet_condense_blocked",
+    "parallel_slogdet_mc_blocked", "panel_factor", "apply_panel",
+    "slogdet_ge", "parallel_slogdet_ge", "parallel_slogdet_mc",
+    "parallel_slogdet_lu",
+]

@@ -1,0 +1,97 @@
+"""Public log-determinant API.
+
+``slogdet(a, method=..., mesh=...)`` dispatches to every implementation in the
+framework and transparently pads non-divisible sizes (the paper assumes
+``N % P == 0``; we embed A into ``diag(A, I)`` which leaves the determinant
+unchanged and keeps max-|.| pivoting stable — identity rows condense to
+no-ops).
+
+Methods:
+  mc            serial matrix condensation (paper baseline)           [1 dev]
+  mc_staged     geometric shape-staged condensation                   [1 dev]
+  mc_blocked    serial rank-K panel condensation                      [1 dev]
+  ge            serial Gaussian elimination w/ partial pivoting       [1 dev]
+  pmc           parallel MC  (paper's algorithm)                      [mesh]
+  pmc_blocked   parallel blocked MC (beyond-paper)                    [mesh]
+  pge           parallel GE  (paper's baseline)                       [mesh]
+  plu           blocked-cyclic LU ("ScaLAPACK" baseline, nb param)    [mesh]
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import blocked as _blocked
+from repro.core import condense as _condense
+from repro.core import gaussian as _gaussian
+from repro.core import parallel as _parallel
+from repro.core import scalapack as _scalapack
+
+__all__ = ["slogdet", "logdet", "pad_to_multiple", "METHODS"]
+
+METHODS = ("mc", "mc_staged", "mc_blocked", "ge",
+           "pmc", "pmc_blocked", "pge", "plu")
+
+_PARALLEL = {"pmc", "pmc_blocked", "pge", "plu"}
+
+
+def pad_to_multiple(a: jax.Array, mult: int) -> jax.Array:
+    """Embed ``a`` in ``diag(a, I_pad)`` so N becomes a multiple of ``mult``."""
+    n = a.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return a
+    out = jnp.zeros((n + pad, n + pad), a.dtype)
+    out = out.at[:n, :n].set(a)
+    idx = jnp.arange(n, n + pad)
+    return out.at[idx, idx].set(1.0)
+
+
+@functools.lru_cache(maxsize=64)
+def _parallel_fn(method: str, mesh, axis_name: str, k: int, nb: int):
+    if method == "pmc":
+        return _parallel.parallel_slogdet_mc(mesh, axis_name)
+    if method == "pmc_blocked":
+        return _blocked.parallel_slogdet_mc_blocked(mesh, axis_name, k=k)
+    if method == "pge":
+        return _gaussian.parallel_slogdet_ge(mesh, axis_name)
+    if method == "plu":
+        return _scalapack.parallel_slogdet_lu(mesh, axis_name, nb=nb)
+    raise ValueError(method)
+
+
+def slogdet(a, *, method: str = "mc", mesh=None, axis_name: str = "rows",
+            k: int = 32, nb: int = 1):
+    """Sign and log|det| of a square matrix. numpy.linalg.slogdet semantics."""
+    if method not in METHODS:
+        raise ValueError(f"unknown method {method!r}; choose from {METHODS}")
+    a = jnp.asarray(a)
+    if a.ndim != 2 or a.shape[0] != a.shape[1]:
+        raise ValueError(f"expected square matrix, got {a.shape}")
+
+    if method in _PARALLEL:
+        if mesh is None:
+            raise ValueError(f"method {method!r} requires a mesh")
+        p = int(mesh.shape[axis_name])
+        mult = int(np.lcm(p, nb)) if method == "plu" else p
+        a = pad_to_multiple(a, mult)
+        return _parallel_fn(method, mesh, axis_name, k, nb)(a)
+
+    if method == "mc":
+        return _condense.slogdet_condense(a)
+    if method == "mc_staged":
+        return _condense.slogdet_condense_staged(a)
+    if method == "mc_blocked":
+        return _blocked.slogdet_condense_blocked(pad_to_multiple(a, k), k=k)
+    if method == "ge":
+        return _gaussian.slogdet_ge(a)
+    raise AssertionError
+
+
+def logdet(a, **kw):
+    """log|det(a)| — the paper's quantity (sign discarded)."""
+    return slogdet(a, **kw)[1]

@@ -1,0 +1,1 @@
+from repro.data.synthetic import DataConfig, synth_batch, data_iterator, random_matrix

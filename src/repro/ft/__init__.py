@@ -1,0 +1,1 @@
+from repro.ft.driver import FTConfig, StepStats, run_training

@@ -1,0 +1,110 @@
+"""Fault-tolerant training driver: restart-on-failure, periodic (async)
+checkpoints, straggler detection, and deterministic data replay.
+
+The driver owns the outer python loop; everything inside a step is one jitted
+XLA program.  On ANY exception from a step (device loss, preemption signal,
+injected test fault) it:
+  1. waits for pending async checkpoint writes,
+  2. restores the latest valid checkpoint (elastic: onto whatever devices
+     exist now),
+  3. replays the data stream from the restored step (synthetic pipeline is a
+     pure function of step — no iterator state to rebuild),
+  4. continues, up to ``max_restarts``.
+
+Straggler mitigation: per-step wall times feed an EWMA; a step slower than
+``straggler_factor`` x EWMA is logged with its index.  On a real pod the
+callback would feed the scheduler (hot-spare swap / re-shard); here it
+surfaces the signal and keeps the history for tests.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+
+from repro.checkpoint import checkpoint as ckpt
+
+
+@dataclass
+class FTConfig:
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    async_ckpt: bool = True
+    max_restarts: int = 3
+    straggler_factor: float = 2.5
+    ewma: float = 0.9
+
+
+@dataclass
+class StepStats:
+    times: List[float] = field(default_factory=list)
+    stragglers: List[int] = field(default_factory=list)
+    restarts: int = 0
+
+
+def run_training(
+    *,
+    state: Any,
+    train_step: Callable[[Any, Any], tuple],
+    batch_fn: Callable[[int], Any],
+    n_steps: int,
+    ft: FTConfig = FTConfig(),
+    shardings: Any = None,
+    on_metrics: Optional[Callable[[int, Dict], None]] = None,
+    fault_injector: Optional[Callable[[int], None]] = None,
+) -> tuple[Any, StepStats]:
+    """Run ``n_steps`` with checkpoint/restart fault tolerance.
+
+    ``batch_fn(step)`` must be deterministic in ``step`` (replayable).
+    ``fault_injector(step)`` (tests) may raise to simulate a node failure.
+    """
+    stats = StepStats()
+    step = int(jax.device_get(state["step"]))
+    ewma_t: Optional[float] = None
+
+    while step < n_steps:
+        try:
+            t0 = time.perf_counter()
+            if fault_injector is not None:    # inside the timed window: an
+                fault_injector(step)          # injected sleep IS a straggler
+            state, metrics = train_step(state, batch_fn(step))
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            stats.times.append(dt)
+            if ewma_t is not None and dt > ft.straggler_factor * ewma_t:
+                stats.stragglers.append(step)
+            # seed the EWMA from the SECOND measured step: the first one
+            # carries XLA compile time and would mask real stragglers
+            if len(stats.times) == 2:
+                ewma_t = dt
+            elif ewma_t is not None:
+                ewma_t = ft.ewma * ewma_t + (1 - ft.ewma) * dt
+            step += 1
+            if on_metrics is not None:
+                on_metrics(step, jax.device_get(metrics))
+            if step % ft.ckpt_every == 0 or step == n_steps:
+                if ft.async_ckpt:
+                    ckpt.save_async(ft.ckpt_dir, state, step)
+                else:
+                    ckpt.save(ft.ckpt_dir, state, step)
+        except (KeyboardInterrupt,):
+            raise
+        except Exception as e:                      # noqa: BLE001 — FT boundary
+            stats.restarts += 1
+            if stats.restarts > ft.max_restarts:
+                raise RuntimeError(
+                    f"exceeded max_restarts={ft.max_restarts}") from e
+            ckpt.wait_pending()
+            last = ckpt.latest_step(ft.ckpt_dir)
+            if last is None:
+                # nothing saved yet: restart from the initial state
+                step = int(jax.device_get(state["step"]))
+                continue
+            state, step = ckpt.restore(ft.ckpt_dir, state, step=last,
+                                       shardings=shardings)
+            step = int(step)
+
+    ckpt.wait_pending()
+    return state, stats

@@ -1,0 +1,39 @@
+"""Jitted kernel entry points with automatic backend dispatch.
+
+On TPU the Pallas kernels compile natively; on CPU (this container) they run
+in ``interpret=True`` mode, which executes the kernel body in Python for
+correctness validation against ref.py.  The algorithm code (core/*.py) calls
+these via the ``update_fn`` / ``gemm_fn`` hooks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import ref as _ref
+from repro.kernels.condense_step import rank1_update_pallas
+from repro.kernels.panel_factor import panel_factor_pallas
+from repro.kernels.panel_update import panel_update_pallas
+
+__all__ = ["rank1_update", "panel_update", "panel_factor_vmem", "on_tpu"]
+
+
+@functools.lru_cache(maxsize=1)
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def rank1_update(a: jax.Array, pc: jax.Array, pr: jax.Array, **kw) -> jax.Array:
+    """Fused a -= outer(pc, pr); Pallas on TPU, interpret elsewhere."""
+    return rank1_update_pallas(a, pc, pr, interpret=not on_tpu(), **kw)
+
+
+def panel_update(a: jax.Array, c: jax.Array, r: jax.Array, **kw) -> jax.Array:
+    """Fused a -= c @ r; Pallas on TPU, interpret elsewhere."""
+    return panel_update_pallas(a, c, r, interpret=not on_tpu(), **kw)
+
+
+def panel_factor_vmem(panel: jax.Array, m0, r_pos=0):
+    """VMEM-resident k-step panel factorization (§Perf P0/It3)."""
+    return panel_factor_pallas(panel, m0, r_pos, interpret=not on_tpu())

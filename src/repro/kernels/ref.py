@@ -1,0 +1,17 @@
+"""Pure-jnp oracles for every Pallas kernel (numerical ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rank1_update_ref", "panel_update_ref"]
+
+
+def rank1_update_ref(a: jax.Array, pc: jax.Array, pr: jax.Array) -> jax.Array:
+    """a (M, N) - outer(pc, pr)."""
+    return a - jnp.outer(pc, pr)
+
+
+def panel_update_ref(a: jax.Array, c: jax.Array, r: jax.Array) -> jax.Array:
+    """a (M, N) - c (M, K) @ r (K, N)."""
+    return a - c @ r

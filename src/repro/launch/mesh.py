@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state — the dry-run must set XLA_FLAGS before the
+first jax call, and smoke tests must keep seeing the single real device.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 chips per pod ("data", "model"); 2 pods add a leading "pod"."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_rows_mesh(n: int | None = None, axis_name: str = "rows") -> Mesh:
+    """1-D mesh for the logdet core (paper's P processors)."""
+    n = n or jax.device_count()
+    return jax.make_mesh((n,), (axis_name,), axis_types=(AxisType.Auto,))
+
+
+def make_mesh_like(spec: str) -> Mesh:
+    """'16x16' / '2x16x16' / '8' -> mesh (for CLI flags)."""
+    dims = tuple(int(x) for x in spec.lower().split("x"))
+    if len(dims) == 1:
+        return make_rows_mesh(dims[0])
+    if len(dims) == 2:
+        return jax.make_mesh(dims, ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+    if len(dims) == 3:
+        return jax.make_mesh(dims, ("pod", "data", "model"),
+                             axis_types=(AxisType.Auto,) * 3)
+    raise ValueError(spec)

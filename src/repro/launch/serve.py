@@ -1,0 +1,89 @@
+"""Serving launcher: batched prefill + decode loop.
+
+``python -m repro.launch.serve --arch <id> --batch 4 --prompt-len 32 --gen 16``
+
+Runs a real token-generation loop on the smoke configs (greedy or top-k
+sampling), with the same prefill/decode step functions the dry-run lowers at
+production shapes.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCHS, get_config
+from repro.models import model as M
+
+
+def generate(params, cfg, prompt, *, max_len: int, gen: int, temperature=0.0,
+             extras=None, key=None):
+    """prompt (B, T0) -> tokens (B, T0+gen); greedy if temperature == 0."""
+    b, t0 = prompt.shape
+    batch = dict(extras or {})
+    batch["tokens"] = prompt
+    logits, caches = M.prefill(params, batch, cfg, max_len)
+
+    @jax.jit
+    def step(tok, caches, pos, key):
+        lg, caches = M.decode_step(params, tok, caches, pos, cfg,
+                                   batch_extras=extras)
+        lg = lg[:, -1]
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(sub, lg / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(lg, axis=-1)
+        return nxt[:, None].astype(jnp.int32), caches, key
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    out = [prompt, tok]
+    for pos in range(t0, t0 + gen - 1):
+        tok, caches, key = step(tok, caches, jnp.asarray(pos, jnp.int32), key)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b", choices=list(ARCHS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=True).replace(remat=False)
+    rng = np.random.default_rng(0)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    prompt = jnp.asarray(
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
+
+    extras = None
+    if cfg.family == "encdec":
+        frames = jnp.asarray(rng.standard_normal(
+            (args.batch, cfg.enc_seq, cfg.d_model)), cfg.dtype)
+        extras = {"memory": M._encode(params, {"frames": frames}, cfg)}
+    elif cfg.family == "vlm":
+        extras = {"img_embeds": jnp.asarray(rng.standard_normal(
+            (args.batch, cfg.n_img_tokens, cfg.d_model)), cfg.dtype)}
+
+    max_len = args.prompt_len + args.gen
+    t0 = time.time()
+    toks = generate(params, cfg, prompt, max_len=max_len, gen=args.gen,
+                    temperature=args.temperature, extras=extras)
+    toks.block_until_ready()
+    dt = time.time() - t0
+    print(f"{args.arch}: generated {args.batch}x{args.gen} tokens "
+          f"in {dt:.2f}s ({args.batch * args.gen / dt:.1f} tok/s incl. compile)")
+    print("sample:", np.asarray(toks[0, args.prompt_len:]))
+    return toks
+
+
+if __name__ == "__main__":
+    main()

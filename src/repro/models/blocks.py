@@ -1,0 +1,165 @@
+"""Transformer / SSM / hybrid block definitions (init + apply pairs).
+
+A "block" is the unit that model.py stacks (via lax.scan over stacked
+params).  Every block apply returns ``(x, new_cache, aux)`` where new_cache
+is None unless prefill/decode and aux is a dict of auxiliary scalars (MoE
+balance loss etc.).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attn_apply, attn_init
+from repro.models.common import ModelConfig, keygen, param, rmsnorm
+from repro.models.mlp import mlp_apply, mlp_init
+from repro.models.moe import moe_apply, moe_init
+from repro.models.ssm import ssm_apply, ssm_init
+
+
+# ---------------------------------------------------------------------------
+# dense transformer block (attn + GLU mlp)
+# ---------------------------------------------------------------------------
+
+def dense_block_init(key, cfg: ModelConfig):
+    kg = keygen(key)
+    d = cfg.d_model
+    return {
+        "attn_norm": param(next(kg), (d,), ("embed",), cfg.param_dtype),
+        "attn": attn_init(next(kg), cfg),
+        "mlp_norm": param(next(kg), (d,), ("embed",), cfg.param_dtype),
+        "mlp": mlp_init(next(kg), cfg),
+    }
+
+
+def dense_block_apply(p, x, cfg, *, mode="train", window=0, positions=None,
+                      cache=None, cache_pos=None):
+    h, new_cache = attn_apply(
+        p["attn"], rmsnorm({"scale": p["attn_norm"]}, x, cfg.norm_eps), cfg,
+        mode=("train" if mode == "train" else mode), window=window,
+        positions=positions, cache=cache, cache_pos=cache_pos)
+    x = x + h
+    x = x + mlp_apply(p["mlp"], rmsnorm({"scale": p["mlp_norm"]}, x, cfg.norm_eps))
+    return x, new_cache, {}
+
+
+# ---------------------------------------------------------------------------
+# MoE block (attn + mixture of experts, optional shared experts)
+# ---------------------------------------------------------------------------
+
+def moe_block_init(key, cfg: ModelConfig):
+    kg = keygen(key)
+    d = cfg.d_model
+    return {
+        "attn_norm": param(next(kg), (d,), ("embed",), cfg.param_dtype),
+        "attn": attn_init(next(kg), cfg),
+        "mlp_norm": param(next(kg), (d,), ("embed",), cfg.param_dtype),
+        "moe": moe_init(next(kg), cfg),
+    }
+
+
+def moe_block_apply(p, x, cfg, *, mode="train", window=0, positions=None,
+                    cache=None, cache_pos=None):
+    h, new_cache = attn_apply(
+        p["attn"], rmsnorm({"scale": p["attn_norm"]}, x, cfg.norm_eps), cfg,
+        mode=("train" if mode == "train" else mode), window=window,
+        positions=positions, cache=cache, cache_pos=cache_pos)
+    x = x + h
+    h, aux = moe_apply(p["moe"], rmsnorm({"scale": p["mlp_norm"]}, x, cfg.norm_eps), cfg)
+    return x + h, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# SSM (mamba2) block
+# ---------------------------------------------------------------------------
+
+def ssm_block_init(key, cfg: ModelConfig):
+    kg = keygen(key)
+    return {
+        "norm": param(next(kg), (cfg.d_model,), ("embed",), cfg.param_dtype),
+        "ssm": ssm_init(next(kg), cfg),
+    }
+
+
+def ssm_block_apply(p, x, cfg, *, mode="train", cache=None, **_):
+    h, new_cache = ssm_apply(
+        p["ssm"], rmsnorm({"scale": p["norm"]}, x, cfg.norm_eps), cfg,
+        mode=mode if mode in ("prefill", "decode") else "train", cache=cache)
+    return x + h, new_cache, {}
+
+
+# ---------------------------------------------------------------------------
+# cross-attention block (llama-3.2-vision style: gated cross-attn + mlp)
+# ---------------------------------------------------------------------------
+
+def cross_block_init(key, cfg: ModelConfig):
+    kg = keygen(key)
+    d = cfg.d_model
+    return {
+        "xattn_norm": param(next(kg), (d,), ("embed",), cfg.param_dtype),
+        "xattn": attn_init(next(kg), cfg, cross=True),
+        "xattn_gate": param(None, (1,), ("null",), cfg.param_dtype),
+        "mlp_norm": param(next(kg), (d,), ("embed",), cfg.param_dtype),
+        "mlp": mlp_init(next(kg), cfg),
+        "mlp_gate": param(None, (1,), ("null",), cfg.param_dtype),
+    }
+
+
+def cross_block_apply(p, x, cfg, *, memory, **_):
+    h, _ = attn_apply(
+        p["xattn"], rmsnorm({"scale": p["xattn_norm"]}, x, cfg.norm_eps), cfg,
+        mode="cross", memory=memory)
+    x = x + jnp.tanh(p["xattn_gate"].astype(x.dtype)) * h
+    h = mlp_apply(p["mlp"], rmsnorm({"scale": p["mlp_norm"]}, x, cfg.norm_eps))
+    return x + jnp.tanh(p["mlp_gate"].astype(x.dtype)) * h, None, {}
+
+
+# ---------------------------------------------------------------------------
+# encoder block (whisper: bidirectional attn + mlp, GELU)
+# ---------------------------------------------------------------------------
+
+def encoder_block_init(key, cfg: ModelConfig):
+    return dense_block_init(key, cfg)
+
+
+def encoder_block_apply(p, x, cfg):
+    h, _ = attn_apply(
+        p["attn"], rmsnorm({"scale": p["attn_norm"]}, x, cfg.norm_eps), cfg,
+        mode="encoder")
+    x = x + h
+    x = x + mlp_apply(p["mlp"], rmsnorm({"scale": p["mlp_norm"]}, x, cfg.norm_eps),
+                      act=jax.nn.gelu)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# decoder block with cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def xdec_block_init(key, cfg: ModelConfig):
+    kg = keygen(key)
+    d = cfg.d_model
+    return {
+        "attn_norm": param(next(kg), (d,), ("embed",), cfg.param_dtype),
+        "attn": attn_init(next(kg), cfg),
+        "xattn_norm": param(next(kg), (d,), ("embed",), cfg.param_dtype),
+        "xattn": attn_init(next(kg), cfg, cross=True),
+        "mlp_norm": param(next(kg), (d,), ("embed",), cfg.param_dtype),
+        "mlp": mlp_init(next(kg), cfg),
+    }
+
+
+def xdec_block_apply(p, x, cfg, *, memory, mode="train", positions=None,
+                     cache=None, cache_pos=None):
+    h, new_cache = attn_apply(
+        p["attn"], rmsnorm({"scale": p["attn_norm"]}, x, cfg.norm_eps), cfg,
+        mode=("train" if mode == "train" else mode),
+        positions=positions, cache=cache, cache_pos=cache_pos)
+    x = x + h
+    h, _ = attn_apply(
+        p["xattn"], rmsnorm({"scale": p["xattn_norm"]}, x, cfg.norm_eps), cfg,
+        mode="cross", memory=memory)
+    x = x + h
+    x = x + mlp_apply(p["mlp"], rmsnorm({"scale": p["mlp_norm"]}, x, cfg.norm_eps),
+                      act=jax.nn.gelu)
+    return x, new_cache, {}

@@ -1,0 +1,215 @@
+"""Model config + shared layers (pure-functional JAX, no framework deps).
+
+Every module in repro.models follows the same protocol:
+
+    init(key, cfg)        -> params pytree (jnp arrays)
+    apply(params, x, ...) -> activations
+    *param logical axes*  -> every array is created through ``param()`` which
+                             registers logical sharding axes; ``specs_of`` then
+                             rebuilds the matching pytree of logical-axis
+                             tuples for sharding/rules.py.
+
+Full-size configs are NEVER materialized in tests — the dry-run uses
+``jax.eval_shape(init, ...)`` to get ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"          # dense | moe | ssm | encdec | vlm | hybrid
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 0              # 0 -> d_model // n_heads
+    d_ff: int = 256
+    vocab: int = 512
+    qkv_bias: bool = False
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    rope_theta: float = 10000.0
+    # sliding-window pattern (gemma3): window size + one global layer every k
+    sliding_window: int = 0        # 0 -> all layers full attention
+    global_every: int = 0          # e.g. 6 -> layers 5, 11, ... are global
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    d_ff_expert: int = 0
+    moe_every: int = 1             # 2 -> every 2nd layer is MoE (llama4)
+    capacity_factor: float = 1.25
+    # SSM (mamba2)
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 64
+    ssm_conv: int = 4
+    ssm_groups: int = 1
+    # enc-dec (whisper)
+    n_enc_layers: int = 0
+    enc_seq: int = 1500            # whisper: 30s of audio -> 1500 frames
+    # vision (llama-3.2-vision)
+    cross_attn_every: int = 0      # e.g. 5 -> one cross-attn layer per 5
+    n_img_tokens: int = 0
+    # hybrid (zamba2)
+    shared_attn_every: int = 0     # e.g. 6 -> shared attn block every 6 ssm
+    # compute
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    attn_impl: str = "full"        # full | chunked
+    attn_chunk: int = 2048
+    remat: bool = True
+    scan_layers: bool = True       # False: unroll (exact cost_analysis FLOPs;
+                                   # XLA can overlap collectives across layers)
+    logits_softcap: float = 0.0
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def nh_ssm(self) -> int:
+        return self.ssm_heads or (self.d_inner // self.ssm_headdim)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Param creation with logical-axis registration
+# ---------------------------------------------------------------------------
+
+# Leaves are plain arrays; logical axes are reconstructed structurally by
+# ``specs_of`` walking the same init code with a tracing context.
+_AXES_TLS: list = []
+
+
+class _AxisRecorder:
+    def __init__(self):
+        self.tree = None
+
+
+def keygen(key):
+    """Infinite stream of subkeys; yields None when key is None (recording)."""
+    if key is None or _AXES_TLS:
+        while True:
+            yield None
+    while True:
+        key, sub = jax.random.split(key)
+        yield sub
+
+
+def param(key, shape, axes, dtype, *, scale: float | None = None):
+    """Create (or abstractly trace) a parameter and register logical axes."""
+    assert len(shape) == len(axes), (shape, axes)
+    if _AXES_TLS:
+        # Recording pass: return axes tuple as the leaf.
+        return _Axes(axes)
+    if scale is None:
+        scale = 1.0 / np.sqrt(shape[0]) if len(shape) >= 2 else 0.02
+    if key is None:
+        return jnp.zeros(shape, dtype)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+class _Axes(tuple):
+    """Marker leaf used during the axis-recording pass."""
+    def __new__(cls, axes):
+        return super().__new__(cls, axes)
+
+
+def specs_of(init_fn, *args, **kw):
+    """Re-run ``init_fn`` in recording mode; returns pytree of axis tuples."""
+    _AXES_TLS.append(True)
+    try:
+        tree = init_fn(*args, **kw)
+    finally:
+        _AXES_TLS.pop()
+    return tree
+
+
+def is_axes_leaf(x):
+    return isinstance(x, _Axes)
+
+
+# ---------------------------------------------------------------------------
+# Shared layers
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(key, d, dtype):
+    return {"scale": param(key, (d,), ("embed",), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + p["scale"].astype(jnp.float32))).astype(dt)
+
+
+def embed_init(key, cfg: ModelConfig):
+    # sigma=0.02 (GPT-2 convention): with tied unembedding this keeps the
+    # initial logit scale ~N(0, 0.02^2 * d) so initial NLL ~ ln(vocab)
+    return param(key, (cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                 cfg.param_dtype, scale=0.02)
+
+
+def embed_lookup(table, ids, dtype):
+    return jnp.take(table, ids, axis=0).astype(dtype)
+
+
+def unembed(table_or_head, x, *, softcap: float = 0.0):
+    logits = jnp.einsum("btd,vd->btv", x.astype(jnp.float32),
+                        table_or_head.astype(jnp.float32))
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float, positions):
+    """positions (...,) -> (sin, cos) of shape (..., head_dim//2), f32."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, sin, cos):
+    """x (..., T, H, D); sin/cos (..., T, D/2) broadcast over heads.
+
+    Rotation happens in f32 (sin/cos precision matters at 500k positions);
+    the result is cast back to x.dtype so activations stay bf16.
+    """
+    half = x.shape[-1] // 2
+    xf = x.astype(jnp.float32)
+    x1, x2 = xf[..., :half], xf[..., half:]
+    s = sin[..., None, :]
+    c = cos[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,30 @@
+"""Gated-linear-unit MLP (SwiGLU / GeGLU) used by every transformer arch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, keygen, param
+
+
+def mlp_init(key, cfg: ModelConfig, *, d_ff: int | None = None):
+    kg = keygen(key)
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    return {
+        "w_gate": param(next(kg), (d, f), ("embed", "mlp"), cfg.param_dtype),
+        "w_up": param(next(kg), (d, f), ("embed", "mlp"), cfg.param_dtype),
+        "w_down": param(next(kg), (f, d), ("mlp", "embed"), cfg.param_dtype),
+    }
+
+
+def mlp_apply(p, x, *, act=jax.nn.silu):
+    from repro.sharding import hints
+    dt = x.dtype
+    x = hints.constrain(x, "residual")
+    g = hints.constrain(jnp.einsum("btd,df->btf", x, p["w_gate"].astype(dt)),
+                        "mlp_hidden")
+    u = hints.constrain(jnp.einsum("btd,df->btf", x, p["w_up"].astype(dt)),
+                        "mlp_hidden")
+    out = jnp.einsum("btf,fd->btd", act(g) * u, p["w_down"].astype(dt))
+    return hints.constrain(out, "residual")

@@ -1,0 +1,542 @@
+"""Model assembly: stacks blocks per architecture family, with lax.scan over
+stacked layer params (+ remat), KV/SSM caches, and three entry points:
+
+    init_model(key, cfg)                          -> params
+    forward(params, batch, cfg)                   -> (logits, aux)     [train]
+    prefill(params, batch, cfg, max_len)          -> (logits, caches)
+    decode_step(params, tokens, caches, pos, cfg) -> (logits, caches)
+    cache_specs(cfg, batch_size, max_len)         -> ShapeDtypeStruct pytree
+
+Families: dense | moe | ssm | encdec | vlm | hybrid.  Heterogeneous stacks
+(gemma3 local:global, llama4 dense/moe interleave, vision cross-attn every
+5th, zamba2 shared-attn every 6th) are expressed as *super-blocks* so the
+scan stays homogeneous; per-layer sliding windows ride the scan as data.
+
+batch dict keys: "tokens" (B, T) int32 — always.  Family extras:
+  encdec: "frames"     (B, enc_seq, d_model)  precomputed audio embeddings (stub)
+  vlm:    "img_embeds" (B, n_img_tokens, d_model) precomputed patch embeds (stub)
+  any:    "memory"     precomputed encoder output (decode loops pass this to
+                       avoid re-encoding every step)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import blocks as B
+from repro.models.common import (
+    ModelConfig, embed_init, embed_lookup, keygen, param, rmsnorm, unembed,
+)
+from repro.models.ssm import ssm_cache_spec
+
+__all__ = ["init_model", "forward", "prefill", "decode_step", "cache_specs",
+           "layer_windows", "model_flops", "count_params"]
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _stack_init(block_init, key, cfg, n):
+    """Initialize ``n`` blocks with stacked (leading-axis n) params."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: block_init(k, cfg))(keys)
+
+
+def layer_windows(cfg: ModelConfig) -> np.ndarray:
+    """Per-layer sliding window (0 = full attention)."""
+    n = cfg.n_layers
+    if not cfg.sliding_window or not cfg.global_every:
+        return np.zeros((n,), np.int32)
+    w = np.full((n,), cfg.sliding_window, np.int32)
+    w[cfg.global_every - 1::cfg.global_every] = 0   # every k-th layer global
+    return w
+
+
+def _maybe_remat(fn, cfg, mode):
+    if cfg.remat and mode == "train":
+        return jax.checkpoint(fn)
+    return fn
+
+
+def _attn_cache_spec(cfg, batch, max_len, dtype):
+    return {
+        "k": jax.ShapeDtypeStruct((batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jax.ShapeDtypeStruct((batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+    }
+
+
+def _pad_kv(nc, pad_to):
+    """Pad a block-level {"k","v"} (B, T, kvh, hd) cache along time."""
+    if nc is None or pad_to is None:
+        return nc
+    def pad(x):
+        t = x.shape[1]
+        if t >= pad_to:
+            return x[:, :pad_to]
+        return jnp.pad(x, ((0, 0), (0, pad_to - t), (0, 0), (0, 0)))
+    return {k: pad(v) for k, v in nc.items()}
+
+
+# ---------------------------------------------------------------------------
+# per-family structure tables
+# ---------------------------------------------------------------------------
+
+def _family_plan(cfg: ModelConfig):
+    """Returns (plan_name, counts) describing the stacked structure."""
+    fam = cfg.family
+    if fam == "dense":
+        return "uniform_dense", {"n": cfg.n_layers}
+    if fam == "moe":
+        if cfg.moe_every <= 1:
+            return "uniform_moe", {"n": cfg.n_layers}
+        assert cfg.n_layers % cfg.moe_every == 0
+        return "pair_moe", {"n": cfg.n_layers // cfg.moe_every,
+                            "dense_per": cfg.moe_every - 1}
+    if fam == "ssm":
+        return "uniform_ssm", {"n": cfg.n_layers}
+    if fam == "encdec":
+        return "encdec", {"n_enc": cfg.n_enc_layers, "n_dec": cfg.n_layers}
+    if fam == "vlm":
+        assert cfg.cross_attn_every > 1
+        per = cfg.cross_attn_every
+        assert cfg.n_layers % per == 0
+        return "vlm", {"n": cfg.n_layers // per, "self_per": per - 1}
+    if fam == "hybrid":
+        per = cfg.shared_attn_every
+        n_super = cfg.n_layers // per
+        extra = cfg.n_layers - n_super * per
+        return "hybrid", {"n": n_super, "per": per, "extra": extra}
+    raise ValueError(f"unknown family {fam}")
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_model(key, cfg: ModelConfig):
+    kg = keygen(key)
+    plan, c = _family_plan(cfg)
+    p: Dict[str, Any] = {"embed": embed_init(next(kg), cfg)}
+
+    if plan in ("uniform_dense",):
+        p["blocks"] = _stack_init(B.dense_block_init, next(kg), cfg, c["n"])
+    elif plan == "uniform_moe":
+        p["blocks"] = _stack_init(B.moe_block_init, next(kg), cfg, c["n"])
+    elif plan == "pair_moe":
+        p["dense_blocks"] = _stack_init(
+            lambda k, f: _stack_init(B.dense_block_init, k, f, c["dense_per"]),
+            next(kg), cfg, c["n"])
+        p["moe_blocks"] = _stack_init(B.moe_block_init, next(kg), cfg, c["n"])
+    elif plan == "uniform_ssm":
+        p["blocks"] = _stack_init(B.ssm_block_init, next(kg), cfg, c["n"])
+    elif plan == "encdec":
+        p["enc_blocks"] = _stack_init(B.encoder_block_init, next(kg), cfg, c["n_enc"])
+        p["enc_norm"] = param(next(kg), (cfg.d_model,), ("embed",), cfg.param_dtype)
+        p["dec_blocks"] = _stack_init(B.xdec_block_init, next(kg), cfg, c["n_dec"])
+    elif plan == "vlm":
+        p["self_blocks"] = _stack_init(
+            lambda k, f: _stack_init(B.dense_block_init, k, f, c["self_per"]),
+            next(kg), cfg, c["n"])
+        p["cross_blocks"] = _stack_init(B.cross_block_init, next(kg), cfg, c["n"])
+    elif plan == "hybrid":
+        p["ssm_blocks"] = _stack_init(
+            lambda k, f: _stack_init(B.ssm_block_init, k, f, c["per"]),
+            next(kg), cfg, c["n"])
+        p["shared_attn"] = B.dense_block_init(next(kg), cfg)   # ONE copy
+        if c["extra"]:
+            p["extra_ssm"] = _stack_init(B.ssm_block_init, next(kg), cfg, c["extra"])
+    else:
+        raise AssertionError(plan)
+
+    p["final_norm"] = param(next(kg), (cfg.d_model,), ("embed",), cfg.param_dtype)
+    if not cfg.tie_embeddings:
+        p["head"] = param(next(kg), (cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                          cfg.param_dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# the stack runner (shared by train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def _run_stack(params, x, cfg, *, mode, caches=None, cache_pos=None,
+               positions=None, memory=None, pad_to=None):
+    """Run all blocks.  Returns (x, new_caches, aux_sum).
+
+    ``caches is None`` (train/prefill) vs provided (decode) is a STATIC
+    (python-level) distinction; scan xs always include the caches pytree when
+    present so per-layer slices ride the scan.
+    """
+    plan, c = _family_plan(cfg)
+    has_cache = caches is not None
+    aux_tot: Dict[str, Any] = {}
+    windows = jnp.asarray(layer_windows(cfg))
+
+    def scan2(body, x, xs):
+        if cfg.scan_layers:
+            return lax.scan(body, x, xs)
+        # unrolled: identical semantics, layer-indexed slices of xs
+        n = jax.tree.leaves(xs)[0].shape[0]
+        ys = []
+        for i in range(n):
+            x, y = body(x, jax.tree.map(lambda l: l[i], xs))
+            ys.append(y)
+        # None/{} subtrees pass through tree.map untouched (scan semantics)
+        return x, jax.tree.map(lambda *ls: jnp.stack(ls), *ys)
+
+    if plan in ("uniform_dense", "uniform_moe"):
+        apply = B.dense_block_apply if plan == "uniform_dense" else B.moe_block_apply
+
+        def body(xc, scanned):
+            if has_cache:
+                bp, w, cache = scanned
+            else:
+                (bp, w), cache = scanned, None
+            fn = _maybe_remat(
+                lambda bp_, x_, cache_: apply(
+                    bp_, x_, cfg, mode=mode, window=w, positions=positions,
+                    cache=cache_, cache_pos=cache_pos), cfg, mode)
+            x_, nc, aux = fn(bp, xc, cache)
+            return x_, (_pad_kv(nc, pad_to), aux)
+
+        xs = ((params["blocks"], windows, caches) if has_cache
+              else (params["blocks"], windows))
+        x, (new_caches, auxs) = scan2(body, x, xs)
+        if auxs:
+            aux_tot = {k: v.sum() for k, v in auxs.items()}
+        return x, new_caches, aux_tot
+
+    if plan == "pair_moe":
+        def body(xc, scanned):
+            if has_cache:
+                (dense_p, moe_p), (dcaches, mcache) = scanned
+            else:
+                (dense_p, moe_p), dcaches, mcache = scanned, None, None
+
+            dense_fn = _maybe_remat(
+                lambda blk_, x_, ci_: B.dense_block_apply(
+                    blk_, x_, cfg, mode=mode, window=0, positions=positions,
+                    cache=ci_, cache_pos=cache_pos), cfg, mode)
+            moe_fn = _maybe_remat(
+                lambda blk_, x_, ci_: B.moe_block_apply(
+                    blk_, x_, cfg, mode=mode, window=0, positions=positions,
+                    cache=ci_, cache_pos=cache_pos), cfg, mode)
+
+            def inner(x_, dense_caches, moe_cache):
+                new_d = []
+                for i in range(c["dense_per"]):
+                    blk = jax.tree.map(lambda l: l[i], dense_p)
+                    ci = (jax.tree.map(lambda l: l[i], dense_caches)
+                          if dense_caches is not None else None)
+                    x_, nc, _ = dense_fn(blk, x_, ci)
+                    new_d.append(_pad_kv(nc, pad_to))
+                x_, nc_m, aux = moe_fn(moe_p, x_, moe_cache)
+                new_d = (jax.tree.map(lambda *ls: jnp.stack(ls), *new_d)
+                         if new_d and new_d[0] is not None else None)
+                return x_, (new_d, _pad_kv(nc_m, pad_to)), aux
+
+            fn = _maybe_remat(inner, cfg, mode)
+            x_, ncs, aux = fn(xc, dcaches, mcache)
+            return x_, (ncs, aux)
+
+        xs = (((params["dense_blocks"], params["moe_blocks"]), caches)
+              if has_cache else (params["dense_blocks"], params["moe_blocks"]))
+        x, (new_caches, auxs) = scan2(body, x, xs)
+        aux_tot = {k: v.sum() for k, v in auxs.items()}
+        return x, new_caches, aux_tot
+
+    if plan == "uniform_ssm":
+        def body(xc, scanned):
+            if has_cache:
+                bp, cache = scanned
+            else:
+                bp, cache = scanned, None
+            fn = _maybe_remat(
+                lambda bp_, x_, cache_: B.ssm_block_apply(
+                    bp_, x_, cfg, mode=mode, cache=cache_), cfg, mode)
+            x_, nc, _ = fn(bp, xc, cache)
+            return x_, nc
+
+        xs = (params["blocks"], caches) if has_cache else params["blocks"]
+        x, new_caches = scan2(body, x, xs)
+        return x, new_caches, aux_tot
+
+    if plan == "encdec":
+        def body(xc, scanned):
+            if has_cache:
+                bp, cache = scanned
+            else:
+                bp, cache = scanned, None
+            fn = _maybe_remat(
+                lambda bp_, x_, cache_: B.xdec_block_apply(
+                    bp_, x_, cfg, memory=memory, mode=mode, positions=positions,
+                    cache=cache_, cache_pos=cache_pos), cfg, mode)
+            x_, nc, _ = fn(bp, xc, cache)
+            return x_, _pad_kv(nc, pad_to)
+
+        xs = (params["dec_blocks"], caches) if has_cache else params["dec_blocks"]
+        x, new_caches = scan2(body, x, xs)
+        return x, new_caches, aux_tot
+
+    if plan == "vlm":
+        def body(xc, scanned):
+            if has_cache:
+                (self_p, cross_p), cache = scanned
+            else:
+                (self_p, cross_p), cache = scanned, None
+
+            self_fn = _maybe_remat(
+                lambda blk_, x_, ci_: B.dense_block_apply(
+                    blk_, x_, cfg, mode=mode, window=0, positions=positions,
+                    cache=ci_, cache_pos=cache_pos), cfg, mode)
+            cross_fn = _maybe_remat(
+                lambda blk_, x_: B.cross_block_apply(
+                    blk_, x_, cfg, memory=memory), cfg, mode)
+
+            def inner(x_, self_caches):
+                new_s = []
+                for i in range(c["self_per"]):
+                    blk = jax.tree.map(lambda l: l[i], self_p)
+                    ci = (jax.tree.map(lambda l: l[i], self_caches)
+                          if self_caches is not None else None)
+                    x_, nc, _ = self_fn(blk, x_, ci)
+                    new_s.append(_pad_kv(nc, pad_to))
+                x_, _, _ = cross_fn(cross_p, x_)
+                new_s = (jax.tree.map(lambda *ls: jnp.stack(ls), *new_s)
+                         if new_s and new_s[0] is not None else None)
+                return x_, new_s
+
+            fn = _maybe_remat(inner, cfg, mode)
+            x_, ncs = fn(xc, cache)
+            return x_, ncs
+
+        xs = (((params["self_blocks"], params["cross_blocks"]), caches)
+              if has_cache else (params["self_blocks"], params["cross_blocks"]))
+        x, new_caches = scan2(body, x, xs)
+        return x, new_caches, aux_tot
+
+    if plan == "hybrid":
+        shared = params["shared_attn"]
+
+        def body(xc, scanned):
+            if has_cache:
+                bp, (scache, acache) = scanned
+            else:
+                bp, scache, acache = scanned, None, None
+
+            ssm_fn = _maybe_remat(
+                lambda blk_, x_, ci_: B.ssm_block_apply(
+                    blk_, x_, cfg, mode=mode, cache=ci_), cfg, mode)
+            attn_fn = _maybe_remat(
+                lambda blk_, x_, ci_: B.dense_block_apply(
+                    blk_, x_, cfg, mode=mode, window=0, positions=positions,
+                    cache=ci_, cache_pos=cache_pos), cfg, mode)
+
+            def inner(x_, ssm_caches, attn_cache):
+                new_s = []
+                for i in range(c["per"]):
+                    blk = jax.tree.map(lambda l: l[i], bp)
+                    ci = (jax.tree.map(lambda l: l[i], ssm_caches)
+                          if ssm_caches is not None else None)
+                    x_, nc, _ = ssm_fn(blk, x_, ci)
+                    new_s.append(nc)
+                x_, nca, _ = attn_fn(shared, x_, attn_cache)
+                new_s = (jax.tree.map(lambda *ls: jnp.stack(ls), *new_s)
+                         if new_s and new_s[0] is not None else None)
+                return x_, (new_s, _pad_kv(nca, pad_to))
+
+            fn = _maybe_remat(inner, cfg, mode)
+            x_, ncs = fn(xc, scache, acache)
+            return x_, ncs
+
+        xs = ((params["ssm_blocks"], caches["super"]) if has_cache
+              else params["ssm_blocks"])
+        x, new_super = scan2(body, x, xs)
+
+        new_extra = None
+        if "extra_ssm" in params:
+            def ebody(xc, scanned):
+                if has_cache:
+                    bp, cache = scanned
+                else:
+                    bp, cache = scanned, None
+                x_, nc, _ = B.ssm_block_apply(bp, xc, cfg, mode=mode, cache=cache)
+                return x_, nc
+            exs = ((params["extra_ssm"], caches["extra"]) if has_cache
+                   else params["extra_ssm"])
+            x, new_extra = scan2(ebody, x, exs)
+
+        new_caches = {"super": new_super, "extra": new_extra}
+        return x, new_caches, aux_tot
+
+    raise AssertionError(plan)
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+def _encode(params, batch, cfg):
+    """Encoder side (whisper): frames (B, S, d) -> memory (B, S, d)."""
+    x = batch["frames"].astype(cfg.dtype)
+    pos = jnp.arange(x.shape[1])
+    half = cfg.d_model // 2
+    freq = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * np.log(10000.0) / half)
+    ang = pos[:, None].astype(jnp.float32) * freq[None, :]
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(cfg.dtype)
+    x = x + pe[None]
+
+    def body(xc, bp):
+        return B.encoder_block_apply(bp, xc, cfg), None
+
+    x, _ = lax.scan(body, x, params["enc_blocks"])
+    return rmsnorm({"scale": params["enc_norm"]}, x, cfg.norm_eps)
+
+
+def _memory_for(params, batch, cfg):
+    if "memory" in batch:
+        return batch["memory"].astype(cfg.dtype)
+    if cfg.family == "encdec":
+        return _encode(params, batch, cfg)
+    if cfg.family == "vlm":
+        return batch["img_embeds"].astype(cfg.dtype)
+    return None
+
+
+def forward_hidden(params, batch, cfg: ModelConfig):
+    """Backbone only: final-norm hidden states (B, T, d) + aux.  The caller
+    owns the unembedding — the training loss uses this with a CHUNKED
+    cross-entropy so the (B, T, vocab) f32 logits never materialize."""
+    from repro.sharding import hints
+    x = embed_lookup(params["embed"], batch["tokens"], cfg.dtype)
+    x = hints.constrain(x, "residual")
+    memory = _memory_for(params, batch, cfg)
+    x, _, aux = _run_stack(params, x, cfg, mode="train", memory=memory)
+    x = rmsnorm({"scale": params["final_norm"]}, x, cfg.norm_eps)
+    return x, aux
+
+
+def forward(params, batch, cfg: ModelConfig):
+    """Training/teacher-forcing forward: logits (B, T, vocab) f32 + aux."""
+    x, aux = forward_hidden(params, batch, cfg)
+    logits = unembed(params.get("head", params["embed"]), x,
+                     softcap=cfg.logits_softcap)
+    return logits, aux
+
+
+def prefill(params, batch, cfg: ModelConfig, max_len: int):
+    """Prompt processing; returns (last-token logits, caches @ max_len)."""
+    tokens = batch["tokens"]
+    t = tokens.shape[1]
+    x = embed_lookup(params["embed"], tokens, cfg.dtype)
+    memory = _memory_for(params, batch, cfg)
+    x, caches, _ = _run_stack(params, x, cfg, mode="prefill",
+                              positions=jnp.arange(t), memory=memory,
+                              pad_to=max_len)
+    x = rmsnorm({"scale": params["final_norm"]}, x, cfg.norm_eps)
+    logits = unembed(params.get("head", params["embed"]), x[:, -1:],
+                     softcap=cfg.logits_softcap)
+    return logits, caches
+
+
+def decode_step(params, tokens, caches, pos, cfg: ModelConfig, batch_extras=None):
+    """One decoding step.  tokens (B, 1); pos scalar index into the cache."""
+    x = embed_lookup(params["embed"], tokens, cfg.dtype)
+    memory = None
+    if batch_extras is not None:
+        memory = _memory_for(params, batch_extras, cfg)
+    positions = jnp.full((1,), pos)
+    x, new_caches, _ = _run_stack(params, x, cfg, mode="decode", caches=caches,
+                                  cache_pos=pos, positions=positions,
+                                  memory=memory)
+    x = rmsnorm({"scale": params["final_norm"]}, x, cfg.norm_eps)
+    logits = unembed(params.get("head", params["embed"]), x,
+                     softcap=cfg.logits_softcap)
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# cache specs (ShapeDtypeStructs — used by serve dry-run; no allocation)
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    plan, c = _family_plan(cfg)
+    dt = cfg.dtype
+
+    def stack(spec, n):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), spec)
+
+    attn = (_attn_cache_spec(cfg, batch, max_len, dt)
+            if cfg.n_heads else None)
+    ssm = ssm_cache_spec(cfg, batch, dt) if cfg.ssm_state else None
+
+    if plan in ("uniform_dense", "uniform_moe"):
+        return stack(attn, c["n"])
+    if plan == "pair_moe":
+        return (stack(stack(attn, c["dense_per"]), c["n"]), stack(attn, c["n"]))
+    if plan == "uniform_ssm":
+        return stack(ssm, c["n"])
+    if plan == "encdec":
+        return stack(attn, c["n_dec"])
+    if plan == "vlm":
+        return stack(stack(attn, c["self_per"]), c["n"])
+    if plan == "hybrid":
+        return {"super": (stack(stack(ssm, c["per"]), c["n"]),
+                          stack(attn, c["n"])),
+                "extra": stack(ssm, c["extra"]) if c["extra"] else None}
+    raise AssertionError(plan)
+
+
+# ---------------------------------------------------------------------------
+# analytic params/FLOPs (6·N_active·D) for §Roofline's MODEL_FLOPS row
+# ---------------------------------------------------------------------------
+
+def count_params(cfg: ModelConfig, *, active_only: bool = False) -> int:
+    """Approximate parameter count from the config (embeddings included)."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    h, kvh = cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.hd if h else 0
+    attn = d * h * hd + 2 * d * kvh * hd + h * hd * d
+    mlp = 3 * d * f
+    fe = cfg.d_ff_expert or f
+    moe_total = (cfg.n_experts + cfg.n_shared_experts) * 3 * d * fe + d * cfg.n_experts
+    moe_active = ((cfg.top_k + cfg.n_shared_experts) * 3 * d * fe
+                  + d * cfg.n_experts)
+    moe_used = moe_active if active_only else moe_total
+
+    d_in = cfg.d_inner
+    g, st, nh = cfg.ssm_groups, cfg.ssm_state, cfg.nh_ssm
+    ssm = (d * (2 * d_in + 2 * g * st + nh)
+           + cfg.ssm_conv * (d_in + 2 * g * st) + d_in * d + d_in + 3 * nh)
+
+    plan, c = _family_plan(cfg)
+    if plan == "uniform_dense":
+        core = cfg.n_layers * (attn + mlp)
+    elif plan == "uniform_moe":
+        core = cfg.n_layers * (attn + moe_used)
+    elif plan == "pair_moe":
+        core = c["n"] * (c["dense_per"] * (attn + mlp) + attn + moe_used)
+    elif plan == "uniform_ssm":
+        core = cfg.n_layers * ssm
+    elif plan == "encdec":
+        core = cfg.n_enc_layers * (attn + mlp) + cfg.n_layers * (2 * attn + mlp)
+    elif plan == "vlm":
+        core = c["n"] * (c["self_per"] * (attn + mlp) + attn + mlp)
+    elif plan == "hybrid":
+        core = cfg.n_layers * ssm + (attn + mlp)  # shared block counted once
+    else:
+        raise AssertionError(plan)
+    return int(core + v * d * (1 if cfg.tie_embeddings else 2))
+
+
+def model_flops(cfg: ModelConfig, n_tokens: int) -> int:
+    """6 * N_active * D — the §Roofline MODEL_FLOPS convention."""
+    return 6 * count_params(cfg, active_only=True) * n_tokens

@@ -1,0 +1,109 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-based scatter dispatch,
+optional shared experts (qwen2-moe), expert-parallel-friendly layout.
+
+Dispatch is O(T * d) gather/scatter (not the O(T * E * C * d) one-hot einsum):
+tokens are assigned a slot = rank within their expert (cumsum of a one-hot
+(T, E) int matrix), scattered into an (E, C, d) buffer, processed by a batched
+expert GLU, and combined back with router weights.  Tokens overflowing the
+capacity C = ceil(T * top_k / E * capacity_factor) are dropped (their combine
+weight is 0) — standard capacity-based MoE semantics.
+
+The (E, ...) leading expert axis is the EP sharding axis ("expert" logical
+axis -> "model" mesh axis); dispatch/combine become all-to-alls under GSPMD.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, keygen, param
+from repro.models.mlp import mlp_init, mlp_apply
+
+
+def moe_init(key, cfg: ModelConfig):
+    kg = keygen(key)
+    d = cfg.d_model
+    e = cfg.n_experts
+    f = cfg.d_ff_expert or cfg.d_ff
+    p = {
+        "router": param(next(kg), (d, e), ("embed", "expert"), jnp.float32),
+        "we_gate": param(next(kg), (e, d, f), ("expert", "embed", "mlp"),
+                         cfg.param_dtype),
+        "we_up": param(next(kg), (e, d, f), ("expert", "embed", "mlp"),
+                       cfg.param_dtype),
+        "we_down": param(next(kg), (e, f, d), ("expert", "mlp", "embed"),
+                         cfg.param_dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(
+            next(kg), cfg, d_ff=(cfg.d_ff_expert or cfg.d_ff) * cfg.n_shared_experts)
+    return p
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor) + 1
+    c = min(max(c, 1), n_tokens)
+    # round up to a multiple of 256 so the capacity dim stays shardable
+    # (the dispatch buffer shards on capacity when experts don't divide
+    # the model axis — qwen2-moe's 60 experts on a 16-way axis)
+    return -(-c // 256) * 256 if n_tokens >= 256 else c
+
+
+def moe_apply(p, x, cfg: ModelConfig):
+    """x (B, T, d) -> (B, T, d); aux losses returned as dict."""
+    from repro.sharding import hints
+    b, t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    # gather the sequence axis before the (b*t) token flatten: dispatch is
+    # global over tokens; a model-sharded T would shuffle the merged dim
+    x = hints.constrain(x, "gathered")
+    xt = x.reshape(b * t, d)
+    n = b * t
+    # decode (t == 1): dropless — capacity covers the worst case so serving
+    # never silently drops a live token's expert assignment.
+    c = capacity(cfg, n) if t > 1 else n
+
+    gates = jax.nn.softmax(
+        jnp.einsum("nd,de->ne", xt.astype(jnp.float32), p["router"]), axis=-1)
+    topw, topi = jax.lax.top_k(gates, k)                    # (n, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # slot of assignment (n, k) within its expert, via one-hot cumsum ranks
+    onehot = jax.nn.one_hot(topi, e, dtype=jnp.int32)        # (n, k, e)
+    flat = onehot.reshape(n * k, e)
+    ranks = (jnp.cumsum(flat, axis=0) - flat)                # exclusive ranks
+    slot = (ranks * flat).sum(-1).reshape(n, k)              # (n, k)
+    keep = slot < c                                          # capacity filter
+    w = topw * keep.astype(topw.dtype)
+
+    # scatter tokens into (e, c, d); overflow writes land out of bounds and
+    # mode="drop" discards them (their combine weight is already 0)
+    ei = topi
+    si = jnp.where(keep, slot, c)                            # c -> dropped
+    buf = jnp.zeros((e, c, d), x.dtype)
+    buf = hints.constrain(buf, "moe_buf")
+    tok_idx = jnp.broadcast_to(jnp.arange(n)[:, None], (n, k))
+    buf = buf.at[ei.reshape(-1), si.reshape(-1)].add(
+        xt[tok_idx.reshape(-1)], mode="drop")
+    ex_in = hints.constrain(buf, "moe_buf")                  # (e, c, d) EP
+
+    # batched expert GLU
+    dt = x.dtype
+    g = jnp.einsum("ecd,edf->ecf", ex_in, p["we_gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", ex_in, p["we_up"].astype(dt))
+    ex_out = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u,
+                        p["we_down"].astype(dt))
+
+    # combine: gather each assignment's output, weight, sum over k
+    gathered = ex_out[ei.reshape(-1), jnp.minimum(si, c - 1).reshape(-1)]
+    gathered = gathered.reshape(n, k, d) * w[..., None].astype(dt)
+    out = gathered.sum(axis=1)
+
+    if "shared" in p:
+        out = out + mlp_apply(p["shared"], x, ).reshape(n, d)
+
+    # load-balancing aux (Switch-style): mean_gate * mean_assign per expert
+    me = gates.mean(0)
+    ce = (onehot.sum(1).astype(jnp.float32)).mean(0)
+    aux = {"moe_balance": (me * ce).sum() * e}
+    return out.reshape(b, t, d), aux

@@ -1,0 +1,199 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) layer.
+
+Implements the chunked SSD algorithm: within a chunk of Q tokens the output
+is a masked (decay-weighted) attention-like contraction; across chunks a
+single recurrent state (nh, hp, state) is carried by lax.scan.  Train and
+prefill cost O(T*Q) instead of O(T^2); decode is an O(1) recurrence — this is
+what makes the ``long_500k`` cells sub-quadratic for mamba2/zamba2.
+
+Layer structure (following the paper's Mamba-2 block):
+  in_proj -> [z | x | B | C | dt],  causal depthwise conv on [x|B|C],
+  SSD with per-head scalar decay A, skip D, gated RMSNorm, out_proj.
+
+Decode cache: {"conv": (B, d_conv-1, convdim), "ssm": (B, nh, hp, state)}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import ModelConfig, keygen, param, rmsnorm
+
+__all__ = ["ssm_init", "ssm_apply", "ssm_cache_spec"]
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.d_inner
+    nh = cfg.nh_ssm
+    hp = d_in // nh
+    g = cfg.ssm_groups
+    st = cfg.ssm_state
+    convdim = d_in + 2 * g * st
+    proj = 2 * d_in + 2 * g * st + nh
+    return d_in, nh, hp, g, st, convdim, proj
+
+
+def ssm_init(key, cfg: ModelConfig):
+    kg = keygen(key)
+    d = cfg.d_model
+    d_in, nh, hp, g, st, convdim, proj = _dims(cfg)
+    return {
+        "in_proj": param(next(kg), (d, proj), ("embed", "inner"), cfg.param_dtype),
+        "conv_w": param(next(kg), (cfg.ssm_conv, convdim), ("conv", "inner"),
+                        cfg.param_dtype, scale=0.5),
+        "conv_b": param(None, (convdim,), ("inner",), cfg.param_dtype),
+        "A_log": param(next(kg), (nh,), ("heads",), jnp.float32, scale=1.0),
+        "D": param(None, (nh,), ("heads",), jnp.float32),
+        "dt_bias": param(None, (nh,), ("heads",), jnp.float32),
+        "norm": param(None, (d_in,), ("inner",), cfg.param_dtype),
+        "out_proj": param(next(kg), (d_in, d), ("inner", "embed"), cfg.param_dtype),
+    }
+
+
+def _split_proj(zxbcdt, cfg):
+    d_in, nh, hp, g, st, convdim, proj = _dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:d_in + convdim]
+    dt = zxbcdt[..., d_in + convdim:]
+    return z, xbc, dt
+
+
+def _split_xbc(xbc, cfg):
+    d_in, nh, hp, g, st, convdim, _ = _dims(cfg)
+    x = xbc[..., :d_in]
+    bmat = xbc[..., d_in:d_in + g * st]
+    cmat = xbc[..., d_in + g * st:]
+    return x, bmat, cmat
+
+
+def _conv_full(xbc, w, b):
+    """Causal depthwise conv over time; xbc (B, T, C), w (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def _ssd_chunked(x, bmat, cmat, dt, A, cfg, h0=None):
+    """Chunked SSD scan.
+
+    x (B,T,nh,hp), bmat/cmat (B,T,g,st) broadcast to heads, dt (B,T,nh) f32,
+    A (nh,) negative.  Returns (y (B,T,nh,hp), h_final (B,nh,hp,st)).
+    """
+    d_in, nh, hp, g, st, convdim, _ = _dims(cfg)
+    b_sz, t, _, _ = x.shape
+    q = min(cfg.ssm_chunk, t)
+    nc = -(-t // q)
+    pad = nc * q - t
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+
+    rep = nh // g
+    # reshape into chunks, put chunk axis first for scan
+    def chunked(u):
+        return u.reshape(b_sz, nc, q, *u.shape[2:]).swapaxes(0, 1)
+
+    xc, bc, cc, dtc = chunked(x), chunked(bmat), chunked(cmat), chunked(dt)
+
+    @jax.checkpoint   # recompute chunk internals in backward: the (q x q)
+    def body(h, inp):  # decay panels would otherwise be saved PER CHUNK
+        xq, bq, cq, dtq = inp                       # (B,q,...) one chunk
+        a = dtq * A                                  # (B,q,nh) log-decay <= 0
+        cum = jnp.cumsum(a, axis=1)                  # (B,q,nh)
+        total = cum[:, -1]                           # (B,nh)
+        bh = jnp.repeat(bq, rep, axis=2)             # (B,q,nh,st)
+        ch = jnp.repeat(cq, rep, axis=2)
+        xdt = xq * dtq[..., None].astype(xq.dtype)   # (B,q,nh,hp)
+
+        # intra-chunk: masked decay attention  L[i,j] = exp(cum_i - cum_j), j<=i
+        scores = jnp.einsum("bihs,bjhs->bhij", ch, bh,
+                            preferred_element_type=jnp.float32)
+        ldiff = cum[:, :, None, :] - cum[:, None, :, :]      # (B,i,j,nh)
+        causal = jnp.tril(jnp.ones((q, q), bool))
+        # mask BEFORE exp: masked entries are exp(-inf)=0 with a zero (not
+        # 0*inf=NaN) gradient — exp(ldiff) overflows for j>i.
+        decay = jnp.exp(jnp.where(causal[None, :, :, None], ldiff, -jnp.inf))
+        w = scores * decay.transpose(0, 3, 1, 2)             # (B,nh,i,j)
+        y_intra = jnp.einsum("bhij,bjhp->bihp", w.astype(xq.dtype), xdt)
+
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum("bihs,bhps->bihp",
+                             (ch.astype(jnp.float32)
+                              * jnp.exp(cum)[..., None]).astype(xq.dtype), h)
+
+        # state update: h' = h * exp(total) + sum_j exp(total - cum_j) B_j xdt_j^T
+        wj = jnp.exp(total[:, None] - cum)                    # (B,q,nh)
+        dh = jnp.einsum("bjhs,bjhp->bhps",
+                        (bh.astype(jnp.float32) * wj[..., None]).astype(xq.dtype),
+                        xdt)
+        h = h * jnp.exp(total)[..., None, None].astype(h.dtype) + dh
+        return h, y_intra + y_inter
+
+    if h0 is None:
+        h0 = jnp.zeros((b_sz, nh, hp, st), x.dtype)
+    h, ys = lax.scan(body, h0, (xc, bc, cc, dtc))
+    y = ys.swapaxes(0, 1).reshape(b_sz, nc * q, nh, hp)
+    if pad:
+        y = y[:, :t]
+    return y, h
+
+
+def ssm_apply(p, xin, cfg: ModelConfig, *, mode: str = "train", cache=None):
+    """Returns (out (B,T,d), new_cache)."""
+    b, t, d = xin.shape
+    d_in, nh, hp, g, st, convdim, _ = _dims(cfg)
+    dt_f = xin.dtype
+
+    zxbcdt = jnp.einsum("btd,dp->btp", xin, p["in_proj"].astype(dt_f))
+    z, xbc_raw, dtp = _split_proj(zxbcdt, cfg)
+    A = -jnp.exp(p["A_log"])                                  # (nh,)
+    dt = jax.nn.softplus(dtp.astype(jnp.float32) + p["dt_bias"])
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None and t == 1
+        conv_hist = jnp.concatenate([cache["conv"], xbc_raw], axis=1)
+        w, bias = p["conv_w"].astype(dt_f), p["conv_b"].astype(dt_f)
+        k = w.shape[0]
+        xbc = jax.nn.silu((conv_hist[:, -k:] * w[None]).sum(1) + bias)[:, None]
+        x, bmat, cmat = _split_xbc(xbc, cfg)
+        xh = x.reshape(b, 1, nh, hp)
+        bh = jnp.repeat(bmat.reshape(b, 1, g, st)[:, 0], nh // g, axis=1)
+        ch = jnp.repeat(cmat.reshape(b, 1, g, st)[:, 0], nh // g, axis=1)
+        dt1 = dt[:, 0]                                        # (B,nh)
+        da = jnp.exp(dt1 * A)                                 # (B,nh)
+        xdt = xh[:, 0] * dt1[..., None].astype(dt_f)
+        h = (cache["ssm"] * da[..., None, None].astype(dt_f)
+             + jnp.einsum("bhp,bhs->bhps", xdt, bh.astype(dt_f)))
+        y = jnp.einsum("bhs,bhps->bhp", ch.astype(dt_f), h)[:, None]
+        new_cache = {"conv": conv_hist[:, -(k - 1):], "ssm": h}
+    else:
+        xbc = _conv_full(xbc_raw, p["conv_w"].astype(dt_f),
+                         p["conv_b"].astype(dt_f))
+        x, bmat, cmat = _split_xbc(xbc, cfg)
+        xh = x.reshape(b, t, nh, hp)
+        bm = bmat.reshape(b, t, g, st)
+        cm = cmat.reshape(b, t, g, st)
+        y, h = _ssd_chunked(xh, bm, cm, dt, A, cfg)
+        if mode == "prefill":
+            k = p["conv_w"].shape[0]
+            tail = xbc_raw[:, -(k - 1):]
+            new_cache = {"conv": tail, "ssm": h}
+
+    y = y + xh * p["D"][None, None, :, None].astype(dt_f)
+    y = y.reshape(b, t, d_in)
+    y = rmsnorm({"scale": p["norm"]}, y * jax.nn.silu(z), cfg.norm_eps)
+    return jnp.einsum("bti,id->btd", y, p["out_proj"].astype(dt_f)), new_cache
+
+
+def ssm_cache_spec(cfg: ModelConfig, batch: int, dtype):
+    """ShapeDtypeStructs for one layer's decode cache."""
+    d_in, nh, hp, g, st, convdim, _ = _dims(cfg)
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm_conv - 1, convdim), dtype),
+        "ssm": jax.ShapeDtypeStruct((batch, nh, hp, st), dtype),
+    }

@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (
+    OptConfig, get_optimizer, clip_by_global_norm, global_norm, lr_at,
+)

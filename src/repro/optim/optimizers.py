@@ -1,0 +1,165 @@
+"""Optimizers (AdamW, Adafactor) + schedules + gradient utilities.
+
+Self-contained pytree optimizers (no optax dependency):
+  * adamw      — fp32 moments; the default.
+  * adafactor  — factored second moment: the memory-feasible choice for the
+                 400B llama4 cell (see DESIGN.md memory budget).
+Gradient utilities: global-norm clipping and bf16 gradient COMPRESSION for
+cross-pod all-reduce (cast-to-bf16 before psum, error tolerated by Adam's
+normalization; enabled via TrainConfig.grad_compression).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"            # adamw | adafactor | sgd
+    lr: float = 3e-4
+    warmup: int = 100
+    decay_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+
+
+def lr_at(cfg: OptConfig, step):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = cfg.lr * jnp.minimum(1.0, (step + 1) / max(cfg.warmup, 1))
+    prog = jnp.clip((step - cfg.warmup) / max(cfg.decay_steps - cfg.warmup, 1),
+                    0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup, warm, cfg.lr * cos)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype),
+                        grads), g
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(cfg: OptConfig, grads, state, params):
+    c = state["count"] + 1
+    cf = c.astype(jnp.float32)
+    lr = lr_at(cfg, state["count"])
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / (1 - b1 ** cf)
+        vh = v / (1 - b2 ** cf)
+        step = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:                      # decoupled decay on matrices only
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"m": new_m, "v": new_v, "count": c}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments; no first moment by default)
+# ---------------------------------------------------------------------------
+
+def adafactor_init(params):
+    def factored(p):
+        if p.ndim >= 2:
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"f": jax.tree.map(factored, params,
+                              is_leaf=lambda x: hasattr(x, "shape")),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(cfg: OptConfig, grads, state, params):
+    c = state["count"] + 1
+    lr = lr_at(cfg, state["count"])
+    decay = 1.0 - (c.astype(jnp.float32)) ** -0.8
+
+    def upd(f, g, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + 1e-30
+        if p.ndim >= 2:
+            vr = decay * f["vr"] + (1 - decay) * g2.mean(axis=-1)
+            vc = decay * f["vc"] + (1 - decay) * g2.mean(axis=-2)
+            denom = (vr[..., None] * vc[..., None, :]
+                     / jnp.maximum(vr.mean(axis=-1)[..., None, None], 1e-30))
+            step = g * jax.lax.rsqrt(denom + 1e-30)
+            nf = {"vr": vr, "vc": vc}
+        else:
+            v = decay * f["v"] + (1 - decay) * g2
+            step = g * jax.lax.rsqrt(v + 1e-30)
+            nf = {"v": v}
+        # update clipping (Adafactor's RMS-1 rule)
+        rms = jnp.sqrt(jnp.mean(step * step) + 1e-30)
+        step = step / jnp.maximum(1.0, rms)
+        if p.ndim >= 2:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), nf
+
+    # f nodes ({"vr","vc"} / {"v"}) are treated as leaves of the FIRST tree
+    is_f = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+    out = jax.tree.map(upd, state["f"], grads, params, is_leaf=is_f)
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_f = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"f": new_f, "count": c}
+
+
+# ---------------------------------------------------------------------------
+# SGD (tests/toys)
+# ---------------------------------------------------------------------------
+
+def sgd_init(params):
+    return {"count": jnp.zeros((), jnp.int32)}
+
+
+def sgd_update(cfg: OptConfig, grads, state, params):
+    lr = lr_at(cfg, state["count"])
+    new_p = jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)
+                      ).astype(p.dtype), params, grads)
+    return new_p, {"count": state["count"] + 1}
+
+
+OPTIMIZERS = {
+    "adamw": (adamw_init, adamw_update),
+    "adafactor": (adafactor_init, adafactor_update),
+    "sgd": (sgd_init, sgd_update),
+}
+
+
+def get_optimizer(cfg: OptConfig):
+    init, update = OPTIMIZERS[cfg.name]
+    return init, functools.partial(update, cfg)

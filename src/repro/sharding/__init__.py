@@ -1,0 +1,3 @@
+from repro.sharding.rules import (
+    make_rules, param_specs, param_shardings, batch_spec, cache_shardings,
+)

@@ -1,0 +1,111 @@
+"""Activation-sharding hints (GSPMD constraints) for intermediates the
+propagation pass gets wrong on its own.
+
+The big one: attention logits (B, H, Tq, Tk).  When heads divide the model
+axis GSPMD shards H; when they don't (gemma3: 4 heads, llama4 GQA kv=8...)
+the default is a REPLICATED (Tq, Tk) panel — 17 GiB/device at 4k train.  The
+fix is sequence parallelism: shard Tq over "model".  Softmax (last dim) stays
+local; the wo projection brings the sequence axis back.
+
+Hints are configured by the launcher per (cfg, mesh) and consulted inside
+model code via ``constrain(x, kind)`` — a no-op when unconfigured (smoke
+tests, single device) so model code never depends on a mesh.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+_STATE = threading.local()
+
+
+def configure(cfg: ModelConfig, mesh: Optional[Mesh], *,
+              kv_masked_write: bool = False):
+    """Install hints for cfg on mesh; pass mesh=None to clear.
+
+    kv_masked_write: decode writes the KV cache with a one-hot masked merge
+    instead of dynamic_update_slice — required when S is sharded (long_500k)
+    because a traced-position slice-update on a sharded dim degenerates to a
+    full regather under GSPMD.
+    """
+    if mesh is None:
+        _STATE.hints = None
+        return
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    model_ax = "model" if "model" in mesh.axis_names else None
+    msize = mesh.shape.get("model", 1)
+    heads_div = cfg.n_heads and msize > 1 and cfg.n_heads % msize == 0
+    b = data_axes or None
+
+    # Sequence-parallel residual stream (Megatron-LM SP): the value saved by
+    # remat at every block seam is (B, T, D) — sharding T over "model" cuts
+    # saved-activation memory 16x.  Temporal-mixing families (ssm/hybrid)
+    # keep the sequence local: SSD scans/convs over a sharded time axis
+    # would shuffle every chunk.
+    seq_sp = cfg.family in ("dense", "moe", "vlm", "encdec")
+
+    hints = {}
+    if model_ax and msize > 1:
+        if heads_div:
+            # logits (B, H, Tq, Tk): heads on model (Megatron TP)
+            hints["attn_logits"] = P(b, model_ax, None, None)
+            hints["qkv"] = P(b, None, model_ax, None)           # (B,T,H,hd)
+            hints["attn_out"] = P(b, None, model_ax, None)
+        else:
+            # few heads (gemma3, GQA KV): sequence-parallel logits; heads
+            # replicated; gather T again right after the attention block.
+            hints["attn_logits"] = P(b, None, model_ax, None)
+            hints["qkv"] = P(b, None, None, None)
+            hints["attn_out"] = P(b, None, None, None)
+        # Megatron mlp: hidden f on model so FSDP weight shards get
+        # gathered, not activation partials all-reduced.
+        hints["mlp_hidden"] = P(b, None, model_ax)               # (B,T,f)
+        hints["residual"] = P(b, model_ax if seq_sp else None, None)
+        hints["gathered"] = P(b, None, None)                     # (B,T,D)
+        hints["ce_logits"] = P(b, None, model_ax)                # (B,tc,V)
+        # (E, C, D) dispatch buffer: experts on model when they divide
+        # (llama4 128/16); otherwise capacity carries the DATA axes only —
+        # the expert FFN dim keeps "model", so the GLU einsums shard as
+        # (e, c/data, f/model) with no axis conflict (qwen2-moe, 60 experts)
+        if cfg.n_experts and cfg.n_experts % msize == 0:
+            hints["moe_buf"] = P(model_ax, None, None)
+        else:
+            hints["moe_buf"] = P(None, b, None)
+    _STATE.hints = {"mesh": mesh, "specs": hints,
+                    "flags": {"kv_masked_write": kv_masked_write}}
+
+
+def flag(name: str) -> bool:
+    st = getattr(_STATE, "hints", None)
+    return bool(st and st.get("flags", {}).get(name))
+
+
+def constrain(x, kind: str):
+    st = getattr(_STATE, "hints", None)
+    if st is None:
+        return x
+    spec = st["specs"].get(kind)
+    if spec is None:
+        return x
+    if x.ndim != len(spec):
+        return x
+    # divisibility guard: drop axes a dim can't shard over evenly (decode
+    # T=1, tiny batches) — GSPMD would pad, wasting a full mesh slice.
+    mesh = st["mesh"]
+    entries = []
+    for dim, e in zip(x.shape, spec):
+        if e is None:
+            entries.append(None)
+            continue
+        axes = e if isinstance(e, tuple) else (e,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        entries.append(e if dim % size == 0 and dim >= size else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))

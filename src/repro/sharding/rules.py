@@ -1,0 +1,254 @@
+"""Sharding rules: param-path -> logical axes -> mesh PartitionSpecs.
+
+Two levels, MaxText-style:
+
+  1. *Logical axes* per parameter, resolved from the leaf's dict-key name
+     (every param name in repro.models is unique per role) and its rank —
+     extra leading dims are layer-stack axes and map to None.
+  2. *Rules* mapping logical axis -> mesh axis (or None), built per
+     (config, mesh, mode):
+
+       embed      ->  FSDP axis ("data" or ("pod","data")) on params
+       heads/mlp/vocab/expert/inner -> "model"  (tensor/expert parallel)
+       kv_heads   ->  "model" only when divisible, else None
+       ...
+
+  Activations: ``batch_spec``/``cache_spec`` build the input shardings used
+  by launch/dryrun.py and train.py.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+__all__ = ["make_rules", "param_specs", "param_shardings", "batch_spec",
+           "cache_shardings", "logical_axes_for"]
+
+# param-name -> logical axes (rightmost-aligned against the leaf rank)
+_NAME_AXES: Dict[str, Tuple[str, ...]] = {
+    "embed": ("vocab", "embed"),
+    "head": ("vocab", "embed"),
+    "wq": ("embed", "heads", "head_dim"),
+    "wk": ("embed", "kv_heads", "head_dim"),
+    "wv": ("embed", "kv_heads", "head_dim"),
+    "wo": ("heads", "head_dim", "embed"),
+    "bq": ("heads", "head_dim"),
+    "bk": ("kv_heads", "head_dim"),
+    "bv": ("kv_heads", "head_dim"),
+    "w_gate": ("embed", "mlp"),
+    "w_up": ("embed", "mlp"),
+    "w_down": ("mlp", "embed"),
+    "we_gate": ("expert", "embed", "mlp"),   # routed experts (EP axis)
+    "we_up": ("expert", "embed", "mlp"),
+    "we_down": ("expert", "mlp", "embed"),
+    "router": ("embed", "expert"),
+    "in_proj": ("embed", "inner"),
+    "out_proj": ("inner", "embed"),
+    "conv_w": ("null", "inner"),
+    "conv_b": ("inner",),
+    "A_log": ("null",),
+    "D": ("null",),
+    "dt_bias": ("null",),
+    "norm": ("embed",),
+    "scale": ("embed",),
+    "attn_norm": ("embed",),
+    "mlp_norm": ("embed",),
+    "xattn_norm": ("embed",),
+    "final_norm": ("embed",),
+    "enc_norm": ("embed",),
+    "xattn_gate": ("null",),
+    "mlp_gate": ("null",),
+}
+
+def logical_axes_for(path, leaf) -> Tuple[Optional[str], ...]:
+    """Logical axes for one param leaf, from its tree path + rank.
+
+    Also resolves optimizer-state leaves: Adam moments share the param's
+    path suffix (same shape, same spec); Adafactor's factored moments end in
+    "vr" (last dim dropped) / "vc" (second-to-last dropped); scalars
+    ("count", "step") are replicated.
+    """
+    name = None
+    last = None
+    for k in path:
+        key = getattr(k, "key", None)
+        last = key if key is not None else last
+        if key in _NAME_AXES:
+            name = key
+    rank = len(leaf.shape)
+    if name is None:
+        if rank == 0:
+            return ()
+        raise ValueError(f"no sharding rule for param path {path}")
+    axes: Tuple[str, ...] = _NAME_AXES[name]
+    if last == "vr":                       # adafactor row stats: drop last dim
+        axes = axes[:-1]
+    elif last == "vc":                     # col stats: drop 2nd-to-last dim
+        axes = axes[:-2] + axes[-1:]
+    if rank < len(axes):
+        raise ValueError(f"{path}: rank {rank} < axes {axes}")
+    return (None,) * (rank - len(axes)) + tuple(axes)
+
+
+def _divisible(n: int, by: int) -> bool:
+    return by > 0 and n % by == 0
+
+
+def make_rules(cfg: ModelConfig, mesh: Mesh, *, fsdp: bool = True,
+               kind: str = "train") -> Dict[str, Optional[object]]:
+    """logical axis -> mesh axis (or None), adapted to cfg divisibility."""
+    model_ax = "model" if "model" in mesh.axis_names else None
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    msize = mesh.shape.get("model", 1)
+
+    # FSDP shards the embed axis of every 2D+ weight across data (+pod).
+    # Enabled for serving too: at 400B scale the weights cannot be held
+    # model-sharded-only; GSPMD inserts the per-layer all-gathers.
+    fsdp_ax = data_axes if (fsdp and data_axes) else None
+
+    rules: Dict[str, Optional[object]] = {
+        "vocab": model_ax,
+        "embed": fsdp_ax,
+        "heads": model_ax if _divisible(cfg.n_heads, msize) else None,
+        "kv_heads": model_ax if _divisible(cfg.n_kv_heads, msize) else None,
+        "head_dim": None,
+        "mlp": model_ax,
+        "expert": model_ax if cfg.n_experts else None,
+        "inner": model_ax,
+        "conv": None,
+        "null": None,
+        "layer": None,
+    }
+    # MoE: if experts shard on model, expert-mlp dim must not also use model.
+    if cfg.n_experts and rules["expert"] is not None:
+        pass  # "mlp" rule only applies within expert tensors via axes order
+    return rules
+
+
+def _spec_from_axes(axes, rules, mesh: Mesh, shape) -> P:
+    """Build a PartitionSpec; every entry must EVENLY divide its dim (pjit
+    input shardings reject padding), and a mesh axis appears at most once."""
+    entries = []
+    used = set()
+    for ax, dim in zip(axes, shape):
+        m = rules.get(ax) if ax is not None else None
+        if m is None:
+            entries.append(None)
+            continue
+        ms = tuple(m) if isinstance(m, tuple) else (m,)
+        ms = tuple(a for a in ms if a not in used)
+        # drop trailing axes until the product divides the dimension
+        while ms and (dim % int(np.prod([mesh.shape[a] for a in ms])) != 0):
+            ms = ms[:-1]
+        used.update(ms)
+        entries.append(ms if ms else None)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def param_specs(params_or_specs, cfg: ModelConfig, rules, mesh: Mesh) -> object:
+    """Pytree of PartitionSpecs matching the params tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_or_specs)
+    out = []
+    for path, leaf in flat:
+        axes = logical_axes_for(path, leaf)
+        out.append(_spec_from_axes(axes, rules, mesh, leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def param_shardings(params_or_specs, cfg: ModelConfig, mesh: Mesh, **kw):
+    rules = make_rules(cfg, mesh, **kw)
+    specs = param_specs(params_or_specs, cfg, rules, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(cfg: ModelConfig, mesh: Mesh, *, kind: str,
+               batch: int | None = None) -> Dict[str, P]:
+    """PartitionSpecs for the model-input batch dict.
+
+    ``batch`` (when known) gates the data-parallel sharding: a global batch
+    that doesn't divide the data axes (long_500k: batch=1) is replicated.
+    """
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if batch is not None and data_axes:
+        dsize = int(np.prod([mesh.shape[a] for a in data_axes]))
+        if batch % dsize:
+            data_axes = ()
+    bspec = data_axes if data_axes else None
+    out = {"tokens": P(bspec, None)}
+    if kind == "train":
+        out["targets"] = P(bspec, None)
+    if cfg.family == "encdec":
+        key = "memory" if kind == "decode" else "frames"
+        out[key] = P(bspec, None, None)
+    if cfg.family == "vlm":
+        out["img_embeds"] = P(bspec, None, None)
+    return out
+
+
+def cache_shardings(cache_specs_tree, cfg: ModelConfig, mesh: Mesh):
+    """KV/SSM cache shardings for serving.
+
+    Attention KV (..., B, S, kvh, hd): batch on data axes; heads on model if
+    divisible, else the sequence dim on model (sequence-parallel KV).
+    SSM conv (..., B, W, convdim) / state (..., B, nh, hp, st): batch on data,
+    inner dims on model.
+    """
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dsize = int(np.prod([mesh.shape[a] for a in data_axes])) if data_axes else 1
+    msize = mesh.shape.get("model", 1)
+    model_ax = "model" if "model" in mesh.axis_names else None
+    heads_ok = _divisible(cfg.n_kv_heads, msize)
+
+    hd_ok = _divisible(cfg.hd if cfg.n_heads else 0, msize)
+
+    def spec_for(path, leaf):
+        shape = leaf.shape
+        names = [getattr(k, "key", None) for k in path]
+        is_kv = any(n in ("k", "v") for n in names)
+        if is_kv:
+            # (layers..., B, S, kvh, hd).  NEVER shard S when batch divides:
+            # the decode write is a dynamic_update_slice at a traced position
+            # along S, which GSPMD can only lower by regathering the cache.
+            lead = (None,) * (len(shape) - 4)
+            batch_ok = _divisible(shape[-4], dsize)
+            if batch_ok:
+                if heads_ok:
+                    return P(*lead, data_axes or None, None, model_ax, None)
+                if hd_ok:
+                    return P(*lead, data_axes or None, None, None, model_ax)
+                return P(*lead, data_axes or None, model_ax, None, None)
+            # tiny batch (long_500k): S carries the data axes (masked-write
+            # decode mode — hints.configure(kv_masked_write=True))
+            if heads_ok:
+                return P(*lead, None, data_axes or None, model_ax, None)
+            if hd_ok:
+                return P(*lead, None, data_axes or None, None, model_ax)
+            seq_axes = tuple(data_axes) + ((model_ax,) if model_ax else ())
+            return P(*lead, None, seq_axes or None, None, None)
+        if "conv" in names:
+            lead = (None,) * (len(shape) - 3)
+            batch_ok = _divisible(shape[-3], dsize)
+            conv_ok = _divisible(shape[-1], msize)
+            return P(*lead, data_axes if batch_ok else None, None,
+                     model_ax if conv_ok else None)
+        if "ssm" in names:
+            # (layers..., B, nh, hp, st)
+            lead = (None,) * (len(shape) - 4)
+            batch_ok = _divisible(shape[-4], dsize)
+            nh_ok = _divisible(shape[-3], msize)
+            return P(*lead, data_axes if batch_ok else None,
+                     model_ax if nh_ok else None, None, None)
+        raise ValueError(f"unknown cache leaf {names}")
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_specs_tree)
+    specs = [spec_for(p, l) for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)

@@ -1,0 +1,2 @@
+from repro.train.step import TrainConfig, make_train_step, init_train_state, make_loss_fn
+from repro.train.loss import cross_entropy, logdet_decorrelation

@@ -1,0 +1,97 @@
+"""Losses: token cross-entropy + the framework-level integration point for
+the paper's technique — an optional log-determinant decorrelation auxiliary
+on hidden-state covariance, computed with the condensation core.
+
+The logdet-reg term maximizes ``logdet(Cov(h) + eps I) - tr(Cov(h))``
+(a soft-whitening / decorrelation objective from the representation-learning
+literature): it is the place a *training framework* genuinely computes a
+large log-determinant every step — the paper's motivating use-case
+(log-likelihood of Gaussian models) expressed as a first-class feature that
+every arch config can enable (TrainConfig.logdet_reg > 0).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.condense import slogdet_condense
+from repro.models.common import ModelConfig
+
+
+def cross_entropy(logits, targets, *, z_loss: float = 1e-4):
+    """Mean token NLL (+ z-loss for logit drift control, MaxText-style)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, targets[..., None].astype(jnp.int32),
+                             axis=-1)[..., 0]
+    nll = (lse - ll).mean()
+    if z_loss:
+        nll = nll + z_loss * (lse ** 2).mean()
+    return nll
+
+
+def chunked_cross_entropy(hidden, embed_or_head, targets, *,
+                          softcap: float = 0.0, z_loss: float = 1e-4,
+                          chunk: int = 512, unroll: bool = False):
+    """CE computed seq-chunk-wise so (B, T, V) f32 logits never materialize.
+
+    For a 262k vocab at (256, 4096) the full logits tensor is 1.1 PB global;
+    chunking bounds the live slab to (B, chunk, V) — with the vocab sharded
+    over "model" that is ~0.5 GiB/device.  jax.checkpoint on the chunk body
+    keeps the backward pass at the same bound (logits are recomputed).
+    """
+    from repro.sharding import hints
+    b, t, d = hidden.shape
+    chunk = min(chunk, t)
+    n_chunks = t // chunk
+    rem = t - n_chunks * chunk
+    table = embed_or_head.astype(jnp.float32)
+    # gather a seq-sharded residual before chunking along T
+    hidden = hints.constrain(hidden, "gathered")
+
+    @jax.checkpoint
+    def chunk_loss(h, y):
+        logits = jnp.einsum("btd,vd->btv", h.astype(jnp.float32), table)
+        logits = hints.constrain(logits, "ce_logits")
+        if softcap:
+            logits = jnp.tanh(logits / softcap) * softcap
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, y[..., None].astype(jnp.int32),
+                                 axis=-1)[..., 0]
+        out = (lse - ll).sum()
+        if z_loss:
+            out = out + z_loss * (lse ** 2).sum()
+        return out
+
+    hc = hidden[:, :n_chunks * chunk].reshape(b, n_chunks, chunk, d)
+    yc = targets[:, :n_chunks * chunk].reshape(b, n_chunks, chunk)
+
+    def body(acc, inp):
+        h, y = inp
+        return acc + chunk_loss(h, y), None
+
+    total, _ = jax.lax.scan(
+        body, jnp.zeros((), jnp.float32),
+        (hc.swapaxes(0, 1), yc.swapaxes(0, 1)),
+        unroll=True if unroll else 1)
+    if rem:
+        total = total + chunk_loss(hidden[:, -rem:], targets[:, -rem:])
+    return total / (b * t)
+
+
+def logdet_decorrelation(h, *, eps: float = 1e-3):
+    """-logdet(Cov(h)+eps I) + tr(Cov) soft-whitening aux on features h.
+
+    h: (..., d) activations; covariance over all leading axes.  The logdet
+    runs through the condensation core (differentiable: every op in
+    slogdet_condense is jnp).
+    """
+    d = h.shape[-1]
+    flat = h.reshape(-1, d).astype(jnp.float32)
+    mu = flat.mean(0)
+    xc = flat - mu
+    cov = xc.T @ xc / flat.shape[0] + eps * jnp.eye(d, dtype=jnp.float32)
+    _, ld = slogdet_condense(cov)
+    return jnp.trace(cov) / d - ld / d

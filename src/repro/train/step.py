@@ -1,0 +1,133 @@
+"""Training step factory: grad accumulation (microbatching), global-norm
+clipping, optional bf16 gradient compression, optional logdet-reg aux, and
+optimizer update — all inside ONE jittable function so the whole step lowers
+to a single XLA program (collectives scheduled/overlapped by the compiler).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import model as M
+from repro.models.common import ModelConfig
+from repro.optim.optimizers import (
+    OptConfig, clip_by_global_norm, get_optimizer,
+)
+from repro.train.loss import (
+    chunked_cross_entropy, cross_entropy, logdet_decorrelation,
+)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = OptConfig()
+    microbatches: int = 1          # grad accumulation steps per train step
+    moe_aux_weight: float = 0.01
+    logdet_reg: float = 0.0        # weight of the condensation-core aux loss
+    grad_compression: bool = False # cast grads to bf16 before the all-reduce
+    ce_chunk: int = 512            # seq chunk for the fused unembed+CE
+    accum_dtype: Any = jnp.float32 # grad-accumulation buffer dtype (bf16 at
+                                   # 400B scale: halves the accum footprint)
+    cast_params_bf16: bool = False # cast 2D+ params to bf16 BEFORE use: the
+                                   # FSDP all-gathers then move bf16, not f32
+                                   # (f32 master stays in the opt state)
+
+
+def make_loss_fn(cfg: ModelConfig, tcfg: TrainConfig):
+    def loss_fn(params, batch):
+        if tcfg.cast_params_bf16:
+            # shard-local cast precedes the FSDP gather -> bf16 on the wire;
+            # grads w.r.t. the f32 leaves flow through the convert
+            params = jax.tree.map(
+                lambda p: p.astype(jnp.bfloat16)
+                if p.ndim >= 2 and p.dtype == jnp.float32 else p, params)
+        hidden, aux = M.forward_hidden(params, batch, cfg)
+        table = params.get("head", params["embed"])
+        loss = chunked_cross_entropy(hidden, table, batch["targets"],
+                                     softcap=cfg.logits_softcap,
+                                     chunk=tcfg.ce_chunk,
+                                     unroll=not cfg.scan_layers)
+        metrics = {"nll": loss}
+        for k, v in aux.items():
+            loss = loss + tcfg.moe_aux_weight * v
+            metrics[k] = v
+        if tcfg.logdet_reg:
+            # decorrelation on the mean-pooled last hidden state — the
+            # framework-level use of the paper's logdet core
+            emb = M.embed_lookup(params["embed"], batch["tokens"], cfg.dtype)
+            pooled = emb.mean(axis=1)
+            reg = logdet_decorrelation(pooled)
+            loss = loss + tcfg.logdet_reg * reg
+            metrics["logdet_reg"] = reg
+        metrics["loss"] = loss
+        return loss, metrics
+    return loss_fn
+
+
+def init_train_state(key, cfg: ModelConfig, tcfg: TrainConfig):
+    params = M.init_model(key, cfg)
+    opt_init, _ = get_optimizer(tcfg.opt)
+    return {"params": params, "opt": opt_init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    loss_fn = make_loss_fn(cfg, tcfg)
+    _, opt_update = get_optimizer(tcfg.opt)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compress(g):
+        if not tcfg.grad_compression:
+            return g
+        return jax.tree.map(
+            lambda x: x.astype(jnp.bfloat16).astype(jnp.float32)
+            if x.dtype == jnp.float32 else x, g)
+
+    def one_micro(params, mb):
+        (loss, metrics), grads = grad_fn(params, mb)
+        return compress(grads), metrics
+
+    def train_step(state, batch):
+        params = state["params"]
+        if tcfg.microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                mb = tcfg.microbatches
+                return x.reshape(mb, b // mb, *x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+            adt = tcfg.accum_dtype
+
+            def body(acc, mb):
+                g, m = one_micro(params, mb)
+                acc_g, acc_m = acc
+                acc_g = jax.tree.map(
+                    lambda a, x: a + x.astype(adt), acc_g, g)
+                acc_m = jax.tree.map(jnp.add, acc_m, m)
+                return (acc_g, acc_m), None
+
+            g0, m0 = one_micro(params, jax.tree.map(lambda x: x[0], mbs))
+            g0 = jax.tree.map(lambda x: x.astype(adt), g0)
+            (grads, metrics), _ = lax.scan(
+                body, (g0, m0), jax.tree.map(lambda x: x[1:], mbs))
+            inv = 1.0 / tcfg.microbatches
+            # keep grads in accum_dtype: clip + optimizer cast PER LEAF, so
+            # no full-tree f32 copy (6.25 GB/chip at 400B) is materialized
+            grads = jax.tree.map(lambda x: x * jnp.asarray(inv, x.dtype),
+                                 grads)
+            metrics = jax.tree.map(lambda x: x * inv, metrics)
+        else:
+            grads, metrics = one_micro(params, batch)
+
+        grads, gnorm = clip_by_global_norm(grads, tcfg.opt.clip_norm)
+        new_params, new_opt = opt_update(grads, state["opt"], params)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        return ({"params": new_params, "opt": new_opt,
+                 "step": state["step"] + 1}, metrics)
+
+    return train_step

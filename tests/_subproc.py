@@ -1,0 +1,38 @@
+"""Helper: run a python snippet in a subprocess with N fake XLA devices."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+PRELUDE = """
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np
+import jax.numpy as jnp
+"""
+
+
+def run_with_devices(code: str, n_devices: int, *, timeout: int = 600) -> str:
+    """Run `code` with ``--xla_force_host_platform_device_count=n_devices``.
+
+    Returns stdout; raises on nonzero exit with stderr attached.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n_devices} "
+        + env.get("XLA_FLAGS", "")
+    )
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", PRELUDE + code],
+        env=env, capture_output=True, text=True, timeout=timeout,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"subprocess failed (rc={proc.returncode}):\n{proc.stderr[-4000:]}"
+        )
+    return proc.stdout

@@ -1,0 +1,138 @@
+"""Per-architecture smoke tests: instantiate the REDUCED config of each
+family and run forward / prefill+decode on CPU, asserting shapes + no NaNs.
+The FULL configs are exercised only via the dry-run (no allocation)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCHS, get_config, skip_shapes
+from repro.models import model as M
+
+
+def _batch_for(cfg, b, t, rng):
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, t)), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((b, cfg.enc_seq, cfg.d_model)), cfg.dtype)
+    if cfg.family == "vlm":
+        batch["img_embeds"] = jnp.asarray(
+            rng.standard_normal((b, cfg.n_img_tokens, cfg.d_model)), cfg.dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_no_nan(arch, rng):
+    cfg = get_config(arch, smoke=True).replace(dtype=jnp.float32, remat=False)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    b, t = 2, 16
+    batch = _batch_for(cfg, b, t, rng)
+    logits, aux = M.forward(params, batch, cfg)
+    assert logits.shape == (b, t, cfg.vocab)
+    assert not bool(jnp.isnan(logits).any()), f"NaNs in {arch} logits"
+    for k, v in aux.items():
+        assert np.isfinite(float(v)), (arch, k)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_one(arch, rng):
+    """One SGD step on the smoke config must reduce nothing to NaN."""
+    cfg = get_config(arch, smoke=True).replace(dtype=jnp.float32, remat=True)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    b, t = 2, 8
+    batch = _batch_for(cfg, b, t, rng)
+    targets = jnp.asarray(rng.integers(0, cfg.vocab, (b, t)), jnp.int32)
+
+    def loss_fn(p):
+        logits, aux = M.forward(p, batch, cfg)
+        ll = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(ll, targets[..., None], axis=-1).mean()
+        return nll + 0.01 * sum(aux.values()) if aux else nll
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert np.isfinite(float(loss)), arch
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)), arch
+    new = jax.tree.map(lambda p, g: p - 1e-3 * g.astype(p.dtype), params, grads)
+    logits2, _ = M.forward(new, batch, cfg)
+    assert not bool(jnp.isnan(logits2).any()), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch, rng):
+    """prefill(t tokens) + decode steps == forward(t+k tokens) logits."""
+    cfg = get_config(arch, smoke=True).replace(dtype=jnp.float32, remat=False)
+    if cfg.n_experts:
+        # dropless for the consistency check: capacity-dropping is inherently
+        # call-shape-dependent (full forward vs prefill+decode see different
+        # token sets), so remove it from this equivalence test.
+        cfg = cfg.replace(capacity_factor=float(cfg.n_experts))
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    b, t_pre, t_total, max_len = 2, 6, 10, 16
+    batch = _batch_for(cfg, b, t_total, rng)
+
+    full_logits, _ = M.forward(params, batch, cfg)
+
+    pre_batch = dict(batch)
+    pre_batch["tokens"] = batch["tokens"][:, :t_pre]
+    logits_p, caches = M.prefill(params, pre_batch, cfg, max_len)
+    np.testing.assert_allclose(
+        np.asarray(logits_p[:, 0]), np.asarray(full_logits[:, t_pre - 1]),
+        rtol=2e-4, atol=2e-4)
+
+    extras = None
+    if cfg.family == "encdec":
+        extras = {"memory": M._encode(params, batch, cfg)}
+    elif cfg.family == "vlm":
+        extras = {"img_embeds": batch["img_embeds"]}
+
+    for pos in range(t_pre, t_total):
+        tok = batch["tokens"][:, pos:pos + 1]
+        logits_d, caches = M.decode_step(params, tok, caches, pos, cfg,
+                                         batch_extras=extras)
+        np.testing.assert_allclose(
+            np.asarray(logits_d[:, 0]), np.asarray(full_logits[:, pos]),
+            rtol=2e-4, atol=2e-4, err_msg=f"{arch} pos={pos}")
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_cache_specs_match_runtime(arch, rng):
+    """cache_specs must structurally match what prefill actually returns."""
+    cfg = get_config(arch, smoke=True).replace(dtype=jnp.float32, remat=False)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    max_len = 12
+    batch = _batch_for(cfg, 2, 6, rng)
+    _, caches = M.prefill(params, batch, cfg, max_len)
+    specs = M.cache_specs(cfg, 2, max_len)
+    got = jax.tree.map(lambda x: (x.shape, str(x.dtype)), caches)
+    want = jax.tree.map(lambda s: (s.shape, str(s.dtype)), specs)
+    assert got == want, f"{arch}\n got={got}\nwant={want}"
+
+
+def test_sliding_window_pattern():
+    cfg = get_config("gemma3-1b")
+    w = M.layer_windows(cfg)
+    assert w.shape == (26,)
+    assert (w[5::6] == 0).all()              # every 6th layer global
+    assert (np.delete(w, np.s_[5::6]) == 512).all()
+
+
+def test_param_counts_in_range():
+    """count_params should land near the advertised model sizes."""
+    expect = {
+        "qwen2.5-3b": (2.5e9, 4.2e9),
+        "qwen1.5-4b": (3.0e9, 5.0e9),
+        "gemma3-1b": (0.7e9, 1.6e9),
+        "phi3-mini-3.8b": (3.3e9, 4.3e9),
+        "llama4-maverick-400b-a17b": (3.2e11, 4.8e11),
+        "qwen2-moe-a2.7b": (1.0e10, 1.7e10),
+        "mamba2-370m": (3.0e8, 4.6e8),
+        "whisper-tiny": (2.0e7, 6.0e7),
+        "llama-3.2-vision-11b": (0.8e10, 1.3e10),
+        "zamba2-7b": (5.5e9, 9.0e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = M.count_params(get_config(arch))
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"

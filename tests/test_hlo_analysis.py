@@ -1,0 +1,59 @@
+"""HLO collective-bytes parser + roofline math unit tests."""
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import HW, collective_bytes, roofline
+
+SAMPLE = """
+HloModule jit_step, entry_computation_layout={...}
+
+ENTRY %main {
+  %p0 = f32[16,1024]{1,0} parameter(0)
+  %ag = f32[256,1024]{1,0} all-gather(%p0), replica_groups=[...], dimensions={0}
+  %ar = f32[16,1024]{1,0} all-reduce(%p0), to_apply=%add
+  %rs = f32[1,1024]{1,0} reduce-scatter(%p0), to_apply=%add, dimensions={0}
+  %a2a = f32[16,1024]{1,0} all-to-all(%p0), dimensions={0}
+  %cp = f32[16,1024]{1,0} collective-permute(%p0), source_target_pairs={{0,1}}
+  %ags = (f32[16,1024]{1,0}, f32[256,1024]{1,0}) all-gather-start(%p0), dimensions={0}
+  %agd = f32[256,1024]{1,0} all-gather-done(%ags)
+}
+"""
+
+
+def test_collective_parse_counts_and_bytes():
+    st = collective_bytes(SAMPLE)
+    assert st.counts == {"all-gather": 2, "all-reduce": 1,
+                         "reduce-scatter": 1, "all-to-all": 1,
+                         "collective-permute": 1}
+    p0 = 16 * 1024 * 4
+    full = 256 * 1024 * 4
+    assert st.by_op["all-reduce"] == 2 * p0
+    # named-operand resolution: in_bytes from the symbol table
+    assert st.by_op["all-gather"] >= full - p0
+    assert st.by_op["collective-permute"] == p0
+    assert st.wire_bytes == sum(st.by_op.values())
+
+
+def test_async_pairs_counted_once():
+    st = collective_bytes(SAMPLE)
+    # -start counted, -done skipped
+    assert st.counts["all-gather"] == 2
+
+
+def test_roofline_terms_and_bottleneck():
+    r = roofline(flops=197e12 * 256, hbm_bytes=0.0, wire_bytes_per_chip=0.0,
+                 chips=256)
+    assert r["compute_s"] == pytest.approx(1.0)
+    assert r["bottleneck"] == "compute_s"
+    r2 = roofline(flops=1.0, hbm_bytes=819e9 * 256 * 2.0,
+                  wire_bytes_per_chip=49.5e9 * 0.5, chips=256)
+    assert r2["memory_s"] == pytest.approx(2.0)
+    assert r2["collective_s"] == pytest.approx(0.5)
+    assert r2["bottleneck"] == "memory_s"
+    assert r2["step_s_lower_bound"] == pytest.approx(2.0)
+
+
+def test_roofline_hardware_constants():
+    assert HW["peak_flops_bf16"] == 197e12
+    assert HW["hbm_bw"] == 819e9
+    assert 45e9 < HW["ici_bw"] < 55e9

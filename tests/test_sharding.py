@@ -1,0 +1,135 @@
+"""Sharding rules unit tests: logical axes resolution, divisibility guards,
+cache specs, batch specs — all pure (no multi-device needed)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import get_config
+from repro.models import model as M
+from repro.optim.optimizers import OptConfig
+from repro.sharding.rules import (
+    batch_spec, cache_shardings, logical_axes_for, make_rules, param_specs,
+)
+from repro.train.step import TrainConfig, init_train_state
+
+
+class FakeMesh:
+    """Just enough Mesh interface for the pure spec functions."""
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def norm(entry):
+    """PartitionSpec entries may be 'x' or ('x',) — normalize to tuple."""
+    if entry is None:
+        return ()
+    return entry if isinstance(entry, tuple) else (entry,)
+
+
+def _specs_for(arch, *, opt="adamw", mesh=MESH):
+    cfg = get_config(arch, smoke=True)
+    tcfg = TrainConfig(opt=OptConfig(name=opt))
+    shapes = jax.eval_shape(
+        lambda k: init_train_state(k, cfg, tcfg), jax.random.PRNGKey(0))
+    full_cfg = get_config(arch)
+    full_shapes = jax.eval_shape(
+        lambda k: init_train_state(k, full_cfg, tcfg), jax.random.PRNGKey(0))
+    rules = make_rules(full_cfg, mesh)
+    return full_cfg, full_shapes, rules
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "qwen2-moe-a2.7b",
+                                  "mamba2-370m", "zamba2-7b"])
+def test_every_param_and_opt_leaf_has_a_spec(arch):
+    cfg, shapes, rules = _specs_for(
+        arch, opt="adafactor" if arch == "qwen2-moe-a2.7b" else "adamw")
+    specs = param_specs(shapes, cfg, rules, MESH)   # must not raise
+    flat_p = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    # every sharded dim must divide evenly
+    for (path, leaf), spec in zip(flat_p, flat_s):
+        for dim, entry in zip(leaf.shape, tuple(spec) + (None,) * 8):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            size = int(np.prod([MESH.shape[a] for a in axes]))
+            assert dim % size == 0, (path, leaf.shape, spec)
+
+
+def test_embed_replicated_when_vocab_indivisible():
+    cfg = get_config("mamba2-370m")               # vocab 50280, not /16
+    shapes = jax.eval_shape(lambda k: M.init_model(k, cfg),
+                            jax.random.PRNGKey(0))
+    rules = make_rules(cfg, MESH)
+    specs = param_specs(shapes, cfg, rules, MESH)
+    emb = specs["embed"]
+    assert emb[0] is None                          # vocab can't shard on 16
+
+
+def test_expert_axis_guard():
+    cfg = get_config("qwen2-moe-a2.7b")           # 60 experts, not /16
+    shapes = jax.eval_shape(lambda k: M.init_model(k, cfg),
+                            jax.random.PRNGKey(0))
+    rules = make_rules(cfg, MESH)
+    specs = param_specs(shapes, cfg, rules, MESH)
+    we = specs["blocks"]["moe"]["we_gate"]         # (L, E, D, F)
+    flat = tuple(we) + (None,) * 4
+    assert flat[1] is None                         # E=60 replicated
+    cfg4 = get_config("llama4-maverick-400b-a17b")  # 128 experts /16 ok
+    shapes4 = jax.eval_shape(lambda k: M.init_model(k, cfg4),
+                             jax.random.PRNGKey(0))
+    specs4 = param_specs(shapes4, cfg4, make_rules(cfg4, MESH), MESH)
+    we4 = tuple(specs4["moe_blocks"]["moe"]["we_gate"]) + (None,) * 4
+    assert norm(we4[1]) == ("model",)
+
+
+def test_batch_spec_small_batch_replicates():
+    cfg = get_config("zamba2-7b")
+    bs = batch_spec(cfg, MESH, kind="decode", batch=1)
+    assert bs["tokens"][0] is None
+    bs128 = batch_spec(cfg, MESH, kind="decode", batch=128)
+    assert norm(bs128["tokens"][0]) == ("data",)
+
+
+def test_cache_shardings_decode_never_shards_seq_for_batchful():
+    """Divisible batch -> S unsharded (dynamic_update_slice stays local)."""
+    cfg = get_config("qwen1.5-4b")                 # kv=20: heads don't divide
+    spec = M.cache_specs(cfg, 128, 32768)
+    cs = cache_shardings(spec, cfg, MESH)
+    k = cs["k"]                                    # (L, B, S, kvh, hd)
+    entries = tuple(k) + (None,) * 5
+    assert entries[2] is None                      # S local
+    assert norm(entries[4]) == ("model",)          # hd sharded
+
+
+def test_cache_shardings_long500k_shards_seq():
+    cfg = get_config("zamba2-7b")
+    spec = M.cache_specs(cfg, 1, 524288)
+    cs = cache_shardings(spec, cfg, MESH)
+    kspec = cs["super"][1]["k"]                    # (n_super, B, S, kvh, hd)
+    entries = tuple(kspec) + (None,) * 5
+    assert norm(entries[2]) == ("data",)           # S carries data axes
+
+
+def test_multipod_rules_use_pod_axis():
+    cfg = get_config("qwen2.5-3b")
+    rules = make_rules(cfg, MESH3)
+    assert rules["embed"] == ("pod", "data")
+
+
+def test_unknown_param_raises():
+    class K:
+        def __init__(self, key):
+            self.key = key
+    with pytest.raises(ValueError, match="no sharding rule"):
+        logical_axes_for((K("mystery_weight"),),
+                         jax.ShapeDtypeStruct((4, 4), jnp.float32))

@@ -1,0 +1,205 @@
+"""Substrate tests: optimizers, checkpoint (atomic/async/elastic), FT driver
+(restart-on-failure, straggler log), data determinism, loss functions."""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs.registry import get_config
+from repro.data.synthetic import DataConfig, random_matrix, synth_batch
+from repro.ft.driver import FTConfig, run_training
+from repro.models import model as M
+from repro.optim.optimizers import OptConfig, get_optimizer, global_norm
+from repro.train.loss import chunked_cross_entropy, cross_entropy
+from repro.train.step import TrainConfig, init_train_state, make_train_step
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["adamw", "adafactor", "sgd"])
+def test_optimizer_reduces_quadratic(name):
+    """Each optimizer must make progress on a convex toy problem."""
+    cfg = OptConfig(name=name, lr=0.05, warmup=1, decay_steps=400,
+                    weight_decay=0.0)
+    init, update = get_optimizer(cfg)
+    params = {"w": jnp.ones((4, 4)) * 3.0, "b": jnp.ones((4,)) * -2.0}
+    opt = init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, opt = update(g, opt, params)
+    assert float(loss(params)) < 0.05 * l0, name
+
+
+def test_adamw_moments_dtype():
+    init, _ = get_optimizer(OptConfig(name="adamw"))
+    p = {"w": jnp.ones((2, 2), jnp.bfloat16)}
+    st = init(p)
+    assert st["m"]["w"].dtype == jnp.float32      # moments always f32
+
+
+# ---------------------------------------------------------------------------
+# chunked CE == plain CE
+# ---------------------------------------------------------------------------
+
+def test_chunked_ce_matches_dense(rng):
+    b, t, d, v = 2, 24, 16, 64
+    h = jnp.asarray(rng.standard_normal((b, t, d)), jnp.float32)
+    table = jnp.asarray(rng.standard_normal((v, d)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, v, (b, t)), jnp.int32)
+    dense = cross_entropy(jnp.einsum("btd,vd->btv", h, table), y)
+    for chunk in (5, 8, 24):
+        got = chunked_cross_entropy(h, table, y, chunk=chunk)
+        np.testing.assert_allclose(float(got), float(dense), rtol=1e-6)
+    # gradients must match too (checkpointed body)
+    g1 = jax.grad(lambda hh: cross_entropy(
+        jnp.einsum("btd,vd->btv", hh, table), y))(h)
+    g2 = jax.grad(lambda hh: chunked_cross_entropy(hh, table, y, chunk=8))(h)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-5,
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# data determinism
+# ---------------------------------------------------------------------------
+
+def test_synth_batch_deterministic():
+    cfg = get_config("qwen2.5-3b", smoke=True)
+    data = DataConfig(seed=3, batch=4, seq=16, kind="markov")
+    a = synth_batch(cfg, data, 7)
+    b = synth_batch(cfg, data, 7)
+    c = synth_batch(cfg, data, 8)
+    assert (a["tokens"] == b["tokens"]).all()
+    assert not (a["tokens"] == c["tokens"]).all()
+    assert a["targets"].shape == a["tokens"].shape
+
+
+def test_random_matrix_kinds():
+    for kind in ("normal", "spd", "corr_scaled", "pivot_adversarial"):
+        a = random_matrix(32, kind=kind, seed=1)
+        assert a.shape == (32, 32)
+        s, ld = np.linalg.slogdet(a)
+        assert np.isfinite(ld)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: atomic, async, elastic restore
+# ---------------------------------------------------------------------------
+
+def _tiny_state():
+    return {"params": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)},
+            "opt": {"count": jnp.asarray(5, jnp.int32)},
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    st = _tiny_state()
+    ckpt.save(tmp_path, st, 7)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), st)
+    got, step = ckpt.restore(tmp_path, like)
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(got["params"]["w"]),
+                                  np.asarray(st["params"]["w"]))
+
+
+def test_checkpoint_latest_and_atomicity(tmp_path):
+    st = _tiny_state()
+    ckpt.save(tmp_path, st, 1)
+    ckpt.save(tmp_path, st, 3)
+    (tmp_path / ".tmp_step_00000009_123").mkdir()   # crashed partial write
+    assert ckpt.latest_step(tmp_path) == 3
+
+
+def test_checkpoint_async(tmp_path):
+    st = _tiny_state()
+    t = ckpt.save_async(tmp_path, st, 11)
+    t.join(timeout=30)
+    assert ckpt.latest_step(tmp_path) == 11
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    st = _tiny_state()
+    ckpt.save(tmp_path, st, 1)
+    bad = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), st)
+    bad["params"]["w"] = jax.ShapeDtypeStruct((3, 3), jnp.float32)
+    with pytest.raises(ValueError):
+        ckpt.restore(tmp_path, bad)
+
+
+# ---------------------------------------------------------------------------
+# FT driver: restart-on-failure resumes from checkpoint; stragglers logged
+# ---------------------------------------------------------------------------
+
+def test_ft_restart_resumes(tmp_path, rng):
+    cfg = get_config("qwen2.5-3b", smoke=True).replace(
+        dtype=jnp.float32, n_layers=1, d_model=32, d_ff=64, vocab=64,
+        n_heads=2, n_kv_heads=2, head_dim=16)
+    tcfg = TrainConfig(opt=OptConfig(name="sgd", lr=1e-3, warmup=1,
+                                     decay_steps=50))
+    state = init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+    step_fn = jax.jit(make_train_step(cfg, tcfg))
+    data = DataConfig(seed=0, batch=2, seq=8)
+
+    boom = {"armed": True}
+
+    def injector(step):
+        if step == 12 and boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("injected node failure")
+
+    ft = FTConfig(ckpt_dir=str(tmp_path), ckpt_every=5, async_ckpt=False,
+                  max_restarts=2)
+    state, stats = run_training(
+        state=state, train_step=step_fn,
+        batch_fn=lambda s: synth_batch(cfg, data, s),
+        n_steps=20, ft=ft, fault_injector=injector)
+    assert stats.restarts == 1
+    assert int(jax.device_get(state["step"])) == 20
+    assert ckpt.latest_step(tmp_path) == 20
+
+
+def test_ft_max_restarts(tmp_path):
+    def always_fail(step):
+        raise RuntimeError("dead node")
+    with pytest.raises(RuntimeError, match="max_restarts"):
+        run_training(
+            state={"step": jnp.asarray(0)},
+            train_step=lambda s, b: (_ for _ in ()).throw(RuntimeError()),
+            batch_fn=lambda s: None, n_steps=3,
+            ft=FTConfig(ckpt_dir=str(tmp_path), max_restarts=1),
+            fault_injector=always_fail)
+
+
+def test_straggler_detection(tmp_path):
+    cfg = get_config("qwen2.5-3b", smoke=True).replace(
+        dtype=jnp.float32, n_layers=1, d_model=32, d_ff=64, vocab=64,
+        n_heads=2, n_kv_heads=2, head_dim=16)
+    tcfg = TrainConfig(opt=OptConfig(name="sgd"))
+    state = init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+    step_fn = make_train_step(cfg, tcfg)
+    jitted = jax.jit(step_fn)
+    data = DataConfig(seed=0, batch=2, seq=8)
+
+    def slow_injector(step):
+        if step == 15:
+            time.sleep(1.0)           # simulated straggler
+
+    ft = FTConfig(ckpt_dir=str(tmp_path), ckpt_every=100, async_ckpt=False,
+                  straggler_factor=3.0)
+    _, stats = run_training(
+        state=state, train_step=jitted,
+        batch_fn=lambda s: synth_batch(cfg, data, s),
+        n_steps=20, ft=ft, fault_injector=slow_injector)
+    assert 15 in stats.stragglers
