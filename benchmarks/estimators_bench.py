@@ -1,0 +1,113 @@
+"""Exact vs stochastic log-determinant: wall time and relative error by N.
+
+For each size the harness builds a seeded well-conditioned SPD matrix,
+computes the f64 LAPACK reference once, then times every requested method
+(median of --iters after a compile warm-up) and records the relative error.
+Results go to bench_out/estimators.json as a list of records
+
+    {"n": ..., "method": ..., "seconds": ..., "logdet": ...,
+     "rel_err": ..., "sem": ...}
+
+plus a CSV twin for the roofline tooling.  Defaults stay CPU-friendly
+(N up to 2048); --full sweeps the paper-scale range N in {512..8192} where
+the O(N^3)-vs-O(N^2 * probes) crossover is unmistakable.
+
+    PYTHONPATH=src python -m benchmarks.estimators_bench
+    PYTHONPATH=src python -m benchmarks.estimators_bench --full \
+        --methods mc_staged,chebyshev,slq
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from benchmarks._common import OUT_DIR, timeit, write_csv
+
+DEFAULT_SIZES = (512, 1024, 2048)
+FULL_SIZES = (512, 1024, 2048, 4096, 8192)
+EXACT = {"mc", "mc_staged", "mc_blocked", "ge"}
+
+
+def make_spd(n: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, 2 * n))
+    return x @ x.T / (2 * n) + 2.0 * np.eye(n)
+
+
+def main(argv=None):
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+
+    from repro.core import slogdet
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", type=str, default="")
+    ap.add_argument("--full", action="store_true",
+                    help="sweep the paper-scale range 512..8192")
+    ap.add_argument("--methods", type=str,
+                    default="mc_staged,chebyshev,slq")
+    ap.add_argument("--num-probes", type=int, default=32)
+    ap.add_argument("--degree", type=int, default=64)
+    ap.add_argument("--num-steps", type=int, default=25)
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.sizes:
+        sizes = tuple(int(s) for s in args.sizes.split(","))
+    else:
+        sizes = FULL_SIZES if args.full else DEFAULT_SIZES
+    methods = args.methods.split(",")
+
+    records = []
+    for n in sizes:
+        a_np = make_spd(n, args.seed)
+        _, ld_ref = np.linalg.slogdet(a_np)
+        a = jnp.asarray(a_np)
+
+        for method in methods:
+            kw = {}
+            if method == "chebyshev":
+                kw = dict(num_probes=args.num_probes, degree=args.degree,
+                          seed=args.seed)
+            elif method == "slq":
+                kw = dict(num_probes=args.num_probes,
+                          num_steps=args.num_steps, seed=args.seed)
+
+            def run(x):
+                return slogdet(x, method=method, **kw)
+
+            t = timeit(run, a, warmup=1, iters=args.iters)
+            rec = {"n": n, "method": method, "seconds": t,
+                   "logdet_ref": float(ld_ref)}
+            if method in EXACT:
+                _, ld = run(a)
+            else:
+                # one estimator pass yields both value and standard error
+                from repro.estimators import estimate_logdet
+                res = estimate_logdet(a, method=method, **kw)
+                ld = res.est
+                rec["sem"] = float(res.sem)
+            rec["logdet"] = float(ld)
+            rec["rel_err"] = abs(float(ld) - ld_ref) / abs(ld_ref)
+            records.append(rec)
+            print(f"n={n:5d} {method:>10s}: {t*1e3:9.1f} ms  "
+                  f"rel_err={rec['rel_err']:.2e}")
+
+    OUT_DIR.mkdir(exist_ok=True)
+    out = OUT_DIR / "estimators.json"
+    out.write_text(json.dumps(records, indent=2))
+    write_csv("estimators.csv",
+              ["n", "method", "seconds", "logdet", "rel_err"],
+              [[r["n"], r["method"], f"{r['seconds']:.6f}",
+                f"{r['logdet']:.6f}", f"{r['rel_err']:.3e}"]
+               for r in records])
+    print(f"estimators -> {out}")
+    return records
+
+
+if __name__ == "__main__":
+    main()

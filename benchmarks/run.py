@@ -4,6 +4,7 @@
   fig7_8        Fig 7/8  — speedups (measured + cluster-modeled)
   fig9_comm     Fig 9    — distribution time + collective traffic
   kernels       (ours)   — kernel roofline projections
+  estimators    (ours)   — exact vs stochastic logdet: time + rel error by N
   roofline      (ours)   — 40-cell dry-run roofline table (if results exist)
 
 ``python -m benchmarks.run [--quick|--full]`` prints CSV lines per bench.
@@ -22,7 +23,8 @@ def main(argv=None):
     ap.add_argument("--full", action="store_true",
                     help="paper-size grid (hours on 1 core)")
     ap.add_argument("--only", default="",
-                    help="comma list: table3,fig7_8,fig9,kernels,roofline")
+                    help="comma list: table3,fig7_8,fig9,kernels,"
+                         "estimators,roofline")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
@@ -67,6 +69,19 @@ def main(argv=None):
             kernels_bench.main(["--m", "512" if args.quick else "1024"])
         except Exception:
             failures.append("kernels")
+            traceback.print_exc()
+
+    if want("estimators"):
+        try:
+            from benchmarks import estimators_bench
+            if args.full:
+                estimators_bench.main(["--full"])
+            elif args.quick:
+                estimators_bench.main(["--sizes", "256,512", "--iters", "2"])
+            else:
+                estimators_bench.main([])
+        except Exception:
+            failures.append("estimators")
             traceback.print_exc()
 
     if want("roofline"):

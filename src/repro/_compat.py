@@ -1,0 +1,59 @@
+"""Version-compat shims for the jax APIs this repo straddles.
+
+The codebase targets current jax (``jax.shard_map``, ``lax.pcast``,
+``jax.sharding.AxisType``) but must also run on the 0.4.x series shipped in
+CPU containers, where those names live elsewhere or don't exist yet:
+
+  * ``shard_map``      jax.shard_map (>=0.6) vs jax.experimental.shard_map
+  * ``pvary``          lax.pcast(..., to="varying") (>=0.8) vs lax.pvary
+                       (0.5-0.7) vs identity (0.4.x: shard_map has no
+                       varying-axes type system, so plain values are fine)
+  * ``make_mesh``      axis_types kwarg exists only where AxisType does
+
+Every module that touches these APIs imports from here instead of guessing.
+"""
+from __future__ import annotations
+
+import jax
+from jax import lax
+
+__all__ = ["shard_map", "pvary", "make_mesh", "axis_size"]
+
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # jax <= 0.5: experimental home
+    from jax.experimental.shard_map import shard_map as _shard_map_exp
+
+    def shard_map(f, **kw):
+        # Without pvary/pcast the 0.4.x replication checker cannot track
+        # per-device partial accumulators (and has no rule for while/scan
+        # carries) — disable it; the collectives are unchanged.
+        kw.setdefault("check_rep", False)
+        return _shard_map_exp(f, **kw)
+
+
+def pvary(x, axis_name):
+    """Mark a replicated value as device-varying along ``axis_name``."""
+    if hasattr(lax, "pcast"):
+        return lax.pcast(x, axis_name, to="varying")
+    if hasattr(lax, "pvary"):
+        return lax.pvary(x, axis_name)
+    return x
+
+
+def axis_size(axis_name):
+    """Static size of a named mesh axis, inside shard_map."""
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    frame = jax.core.axis_frame(axis_name)  # jax 0.4.x: returns the size
+    return frame if isinstance(frame, int) else frame.size
+
+
+def make_mesh(axis_shapes, axis_names):
+    """jax.make_mesh with explicit Auto axis types where supported."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(axis_shapes, axis_names,
+                             axis_types=(axis_type.Auto,) * len(axis_names))
+    return jax.make_mesh(axis_shapes, axis_names)

@@ -1,7 +1,9 @@
 """Core: the paper's contribution — distributed log-determinant via
 parallel matrix condensation, plus the baselines it is evaluated against."""
 
-from repro.core.api import slogdet, logdet, pad_to_multiple, METHODS
+from repro.core.api import (
+    slogdet, logdet, logdet_batched, pad_to_multiple, METHODS,
+)
 from repro.core.condense import (
     slogdet_condense,
     slogdet_condense_staged,
@@ -19,7 +21,7 @@ from repro.core.parallel import parallel_slogdet_mc
 from repro.core.scalapack import parallel_slogdet_lu
 
 __all__ = [
-    "slogdet", "logdet", "pad_to_multiple", "METHODS",
+    "slogdet", "logdet", "logdet_batched", "pad_to_multiple", "METHODS",
     "slogdet_condense", "slogdet_condense_staged", "condense_steps",
     "combine_slogdet", "slogdet_condense_blocked",
     "parallel_slogdet_mc_blocked", "panel_factor", "apply_panel",

@@ -6,7 +6,7 @@ framework and transparently pads non-divisible sizes (the paper assumes
 unchanged and keeps max-|.| pivoting stable — identity rows condense to
 no-ops).
 
-Methods:
+Exact methods (any square matrix, O(N^3)):
   mc            serial matrix condensation (paper baseline)           [1 dev]
   mc_staged     geometric shape-staged condensation                   [1 dev]
   mc_blocked    serial rank-K panel condensation                      [1 dev]
@@ -15,6 +15,23 @@ Methods:
   pmc_blocked   parallel blocked MC (beyond-paper)                    [mesh]
   pge           parallel GE  (paper's baseline)                       [mesh]
   plu           blocked-cyclic LU ("ScaLAPACK" baseline, nb param)    [mesh]
+
+Stochastic estimators (SPD matrices, O(degree * probes) matvecs — see
+repro/estimators; sub-cubic, matrix-free, mesh-shardable):
+  chebyshev     stochastic Chebyshev expansion (Han et al.)       [1 dev|mesh]
+  slq           stochastic Lanczos quadrature (Ubaru et al.)      [1 dev|mesh]
+
+Choosing: exact condensation is the right call when you need all digits, a
+sign, or N is small enough for O(N^3) (<~ 4k on one device); the estimators
+when A is huge, implicit, or stacked and ~2-3 significant digits suffice.
+Accuracy knobs: ``num_probes`` shrinks Monte-Carlo noise like 1/sqrt(k)
+(tracked — `repro.estimators.estimate_logdet` returns the standard error);
+``degree``/``num_steps`` shrink the spectral truncation bias geometrically
+at a matvec apiece, with rate degrading as cond(A) grows.  Estimator sign
+is always +1 (SPD assumption).
+
+``logdet_batched(stack)`` maps any of mc/chebyshev/slq over a (B, N, N)
+stack of SPD matrices in one vectorized call (GMM covariance workloads).
 """
 from __future__ import annotations
 
@@ -31,12 +48,15 @@ from repro.core import gaussian as _gaussian
 from repro.core import parallel as _parallel
 from repro.core import scalapack as _scalapack
 
-__all__ = ["slogdet", "logdet", "pad_to_multiple", "METHODS"]
+__all__ = ["slogdet", "logdet", "logdet_batched", "pad_to_multiple",
+           "METHODS"]
 
 METHODS = ("mc", "mc_staged", "mc_blocked", "ge",
-           "pmc", "pmc_blocked", "pge", "plu")
+           "pmc", "pmc_blocked", "pge", "plu",
+           "chebyshev", "slq")
 
 _PARALLEL = {"pmc", "pmc_blocked", "pge", "plu"}
+_ESTIMATOR = {"chebyshev", "slq"}
 
 
 def pad_to_multiple(a: jax.Array, mult: int) -> jax.Array:
@@ -64,14 +84,47 @@ def _parallel_fn(method: str, mesh, axis_name: str, k: int, nb: int):
     raise ValueError(method)
 
 
+def _estimator_slogdet(a, method: str, mesh, axis_name: str, **est_kw):
+    from repro import estimators as _est
+
+    if mesh is not None:
+        p = int(mesh.shape[axis_name])
+        padded = pad_to_multiple(a, p)
+        if padded is not a:
+            # diag(A, I): unit eigenvalues, logdet += 0 — but user-supplied
+            # Chebyshev bounds must be widened to bracket 1, else T_j blows
+            # up outside [-1, 1] on the padded directions.
+            if est_kw.get("lmin") is not None:
+                est_kw["lmin"] = min(float(est_kw["lmin"]), 1.0)
+            if est_kw.get("lmax") is not None:
+                est_kw["lmax"] = max(float(est_kw["lmax"]), 1.0)
+        a = _est.ShardedOperator(padded, mesh, axis_name)
+    res = _est.estimate_logdet(a, method=method, **est_kw)
+    return jnp.ones((), res.est.dtype), res.est
+
+
 def slogdet(a, *, method: str = "mc", mesh=None, axis_name: str = "rows",
-            k: int = 32, nb: int = 1):
-    """Sign and log|det| of a square matrix. numpy.linalg.slogdet semantics."""
+            k: int = 32, nb: int = 1, **est_kw):
+    """Sign and log|det| of a square matrix. numpy.linalg.slogdet semantics.
+
+    Estimator methods ("chebyshev", "slq") assume SPD input, return sign 1,
+    and accept the keywords of `repro.estimators.logdet_chebyshev` /
+    `logdet_slq` (``num_probes``, ``degree`` / ``num_steps``, ``seed``,
+    ``lmin``/``lmax``, ...).  Exact methods reject estimator keywords.
+    """
     if method not in METHODS:
         raise ValueError(f"unknown method {method!r}; choose from {METHODS}")
-    a = jnp.asarray(a)
-    if a.ndim != 2 or a.shape[0] != a.shape[1]:
-        raise ValueError(f"expected square matrix, got {a.shape}")
+    a_arr = a if isinstance(a, jax.Array) else jnp.asarray(a)
+    shape = tuple(a_arr.shape)
+    if len(shape) != 2 or shape[0] != shape[1]:
+        raise ValueError(f"expected square matrix, got {shape}")
+
+    if method in _ESTIMATOR:
+        return _estimator_slogdet(a_arr, method, mesh, axis_name, **est_kw)
+    if est_kw:
+        raise TypeError(f"method {method!r} takes no estimator keywords: "
+                        f"{sorted(est_kw)}")
+    a = a_arr
 
     if method in _PARALLEL:
         if mesh is None:
@@ -95,3 +148,13 @@ def slogdet(a, *, method: str = "mc", mesh=None, axis_name: str = "rows",
 def logdet(a, **kw):
     """log|det(a)| — the paper's quantity (sign discarded)."""
     return slogdet(a, **kw)[1]
+
+
+def logdet_batched(stack, *, method: str = "chebyshev", **kw):
+    """``log|det|`` per matrix of an SPD (B, N, N) stack -> (B,).
+
+    See `repro.estimators.logdet_batched` (re-exported here as the public
+    entry point next to `slogdet`).
+    """
+    from repro import estimators as _est
+    return _est.logdet_batched(stack, method=method, **kw)

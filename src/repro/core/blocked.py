@@ -35,6 +35,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec
 
+from repro._compat import axis_size as _axis_size, shard_map as _shard_map
 from repro.core.condense import condense_steps, slogdet_condense
 from repro.core.parallel import mc_step_fn
 
@@ -220,7 +221,7 @@ def parallel_slogdet_mc_blocked(mesh, axis_name: str = "rows", *, k: int = 32,
 
     def kernel(local):
         L, N = local.shape
-        P = lax.axis_size(axis_name)
+        P = _axis_size(axis_name)
         me = lax.axis_index(axis_name)
         n_rounds = (L - 1) // k
         lrow = jnp.arange(L)
@@ -279,7 +280,7 @@ def parallel_slogdet_mc_blocked(mesh, axis_name: str = "rows", *, k: int = 32,
         sign_total = jnp.prod(signs) * tsign
         return sign_total.reshape(1), logdet_total.reshape(1)
 
-    shmapped = jax.shard_map(
+    shmapped = _shard_map(
         kernel,
         mesh=mesh,
         in_specs=(PartitionSpec(axis_name, None),),

@@ -23,10 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-def _pvary(x, axis_name):
-    """pcast-to-varying (pvary is deprecated in jax 0.8)."""
-    return lax.pcast(x, axis_name, to="varying")
-
+from repro._compat import (axis_size as _axis_size, pvary as _pvary,
+                           shard_map as _shard_map)
 
 __all__ = ["slogdet_ge", "parallel_slogdet_ge", "ge_step_fn", "cyclic_perm", "perm_parity"]
 
@@ -110,7 +108,7 @@ def ge_step_fn(axis_name: str):
     def step(t, carry):
         local, sign, logdet = carry
         L, N = local.shape
-        P = lax.axis_size(axis_name)
+        P = _axis_size(axis_name)
         me = lax.axis_index(axis_name)
         lrow = jnp.arange(L)
         grow = lrow * P + me                     # global index of each local row
@@ -181,7 +179,7 @@ def parallel_slogdet_ge(mesh, axis_name: str = "rows"):
         # sign/logdet are accumulated identically on all devices.
         return sign.reshape(1), logdet.reshape(1)
 
-    shmapped = jax.shard_map(
+    shmapped = _shard_map(
         kernel,
         mesh=mesh,
         in_specs=(PartitionSpec(axis_name, None),),

@@ -40,12 +40,9 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec
 
+from repro._compat import (axis_size as _axis_size, pvary as _pvary,
+                           shard_map as _shard_map)
 from repro.core.condense import slogdet_condense
-
-def _pvary(x, axis_name):
-    """pcast-to-varying (pvary is deprecated in jax 0.8)."""
-    return lax.pcast(x, axis_name, to="varying")
-
 
 __all__ = ["parallel_slogdet_mc", "mc_step_fn", "mc_local_phase"]
 
@@ -63,7 +60,7 @@ def mc_step_fn(axis_name: str, *, update_fn=None):
     def step(t, carry):
         local, sign, logdet = carry
         L, N = local.shape
-        P = lax.axis_size(axis_name)
+        P = _axis_size(axis_name)
         me = lax.axis_index(axis_name)
         i = t // P                            # round = owner's local row index
         p = t % P                             # owner device
@@ -126,7 +123,7 @@ def mc_local_phase(local, axis_name: str, *, t0: int = 0, n_steps: int | None = 
     steps starting at ``t0`` (default: the full ``(L-1)*P`` schedule).
     """
     L, N = local.shape
-    P = lax.axis_size(axis_name)
+    P = _axis_size(axis_name)
     if n_steps is None:
         n_steps = (L - 1) * P - t0
     step = mc_step_fn(axis_name, update_fn=update_fn)
@@ -138,7 +135,7 @@ def mc_local_phase(local, axis_name: str, *, t0: int = 0, n_steps: int | None = 
 def _mc_kernel(axis_name: str, update_fn=None):
     def kernel(local):
         L, N = local.shape
-        P = lax.axis_size(axis_name)
+        P = _axis_size(axis_name)
         local, sign, logdet = mc_local_phase(local, axis_name, update_fn=update_fn)
 
         # ---- tail: gather the P live rows (one per device) -------------------
@@ -167,7 +164,7 @@ def parallel_slogdet_mc(mesh, axis_name: str = "rows", *, update_fn=None):
     nproc = int(mesh.shape[axis_name])
     kernel = _mc_kernel(axis_name, update_fn=update_fn)
 
-    shmapped = jax.shard_map(
+    shmapped = _shard_map(
         kernel,
         mesh=mesh,
         in_specs=(PartitionSpec(axis_name, None),),

@@ -29,12 +29,9 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec
 
+from repro._compat import (axis_size as _axis_size, pvary as _pvary,
+                           shard_map as _shard_map)
 from repro.core.gaussian import cyclic_perm, perm_parity
-
-def _pvary(x, axis_name):
-    """pcast-to-varying (pvary is deprecated in jax 0.8)."""
-    return lax.pcast(x, axis_name, to="varying")
-
 
 __all__ = ["parallel_slogdet_lu"]
 
@@ -45,7 +42,7 @@ def parallel_slogdet_lu(mesh, axis_name: str = "rows", *, nb: int = 1):
 
     def kernel(local):
         L, N = local.shape
-        P = lax.axis_size(axis_name)
+        P = _axis_size(axis_name)
         me = lax.axis_index(axis_name)
         lrow = jnp.arange(L)
         grow = lrow * P + me
@@ -119,7 +116,7 @@ def parallel_slogdet_lu(mesh, axis_name: str = "rows", *, nb: int = 1):
         local, sign, logdet = lax.fori_loop(0, n_panels, panel_step, carry)
         return sign.reshape(1), logdet.reshape(1)
 
-    shmapped = jax.shard_map(
+    shmapped = _shard_map(
         kernel,
         mesh=mesh,
         in_specs=(PartitionSpec(axis_name, None),),

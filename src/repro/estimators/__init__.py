@@ -1,0 +1,76 @@
+"""Stochastic log-determinant estimators (sub-cubic, matrix-free).
+
+The condensation core (repro/core) computes *exact* log-determinants in
+O(N^3) FLOPs.  This package trades a controlled approximation for
+O(matvec) cost — the scaling regime Han et al. (stochastic Chebyshev,
+arXiv:1503.06394) and Ubaru–Chen–Saad (stochastic Lanczos quadrature)
+showed wins for huge SPD, implicit, and batched operators:
+
+  hutchinson   probe generation + trace estimation with variance tracking
+  chebyshev    stochastic Chebyshev expansion of log on a spectral interval
+  slq          stochastic Lanczos quadrature (no spectral bounds needed)
+  matvec       pluggable operator backends: dense, batched stack,
+               mesh-sharded rows + Pallas tiled matvec kernel
+
+User-facing entry points: ``repro.core.slogdet(a, method="chebyshev"|"slq")``
+for a single matrix and `logdet_batched` for stacks (GMM covariances).
+All estimators assume SPD input (they estimate ``tr(log A)``).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.estimators.chebyshev import (
+    chebyshev_coeffs_log, logdet_chebyshev, spectral_bounds,
+)
+from repro.estimators.hutchinson import (
+    TraceEstimate, hutchinson_trace, make_probes, mean_sem,
+)
+from repro.estimators.matvec import (
+    BatchedOperator, DenseOperator, LinearOperator, ShardedOperator,
+    as_operator, rowwise_matvec_specs,
+)
+from repro.estimators.slq import lanczos, logdet_slq
+
+__all__ = [
+    "TraceEstimate", "hutchinson_trace", "make_probes", "mean_sem",
+    "logdet_chebyshev", "chebyshev_coeffs_log", "spectral_bounds",
+    "logdet_slq", "lanczos",
+    "LinearOperator", "DenseOperator", "BatchedOperator", "ShardedOperator",
+    "as_operator", "rowwise_matvec_specs",
+    "ESTIMATOR_METHODS", "estimate_logdet", "logdet_batched",
+]
+
+ESTIMATOR_METHODS = ("chebyshev", "slq")
+
+_ESTIMATORS = {"chebyshev": logdet_chebyshev, "slq": logdet_slq}
+
+
+def estimate_logdet(a, method: str = "chebyshev", **kw) -> TraceEstimate:
+    """Dispatch to a logdet estimator by name; see `logdet_chebyshev`,
+    `logdet_slq` for the method-specific keywords."""
+    if method not in _ESTIMATORS:
+        raise ValueError(
+            f"unknown estimator {method!r}; choose from {ESTIMATOR_METHODS}")
+    return _ESTIMATORS[method](a, **kw)
+
+
+def logdet_batched(stack, *, method: str = "chebyshev", **kw):
+    """``log|det|`` of every matrix in an SPD (B, n, n) stack -> (B,).
+
+    ``method`` is an estimator name or ``"mc"`` for the exact condensation
+    core mapped over the stack (the crossover reference: exact is the right
+    call for small n, estimators for large).  Estimator keywords pass
+    through (``num_probes``, ``degree`` / ``num_steps``, ``seed``, ...).
+    """
+    stack = jnp.asarray(stack)
+    if stack.ndim != 3 or stack.shape[1] != stack.shape[2]:
+        raise ValueError(f"expected (B, n, n) stack, got {stack.shape}")
+    if method == "mc":
+        import jax
+
+        from repro.core.condense import slogdet_condense
+        if kw:
+            raise TypeError(f"method 'mc' takes no estimator keywords: {kw}")
+        return jax.vmap(lambda a: slogdet_condense(a)[1])(stack)
+    return estimate_logdet(stack, method=method, **kw).est

@@ -1,0 +1,132 @@
+"""Stochastic Chebyshev expansion for log-determinant (Han–Malioutov–Shin).
+
+For SPD ``A`` with spectrum inside ``[lmin, lmax]``:
+
+    logdet(A) = tr(log A) ~= sum_{j=0}^{deg} c_j tr(T_j(B)),
+    B = (2A - (lmax + lmin) I) / (lmax - lmin)           (spectrum in [-1, 1])
+
+where ``c_j`` are the Chebyshev coefficients of
+``g(t) = log((lmax - lmin) t / 2 + (lmax + lmin) / 2)`` and each trace is
+estimated with Hutchinson probes via the three-term recurrence
+
+    w_0 = v,  w_1 = B v,  w_{j+1} = 2 B w_j - w_{j-1}
+
+— O(deg * num_probes) matvecs total, no factorization, no O(n^3) term.
+Degree cost/accuracy: the truncation error decays like
+``rho^{-deg}`` with ``rho`` driven by sqrt(cond(A)) (Han et al. Thm. 4.1) —
+well-conditioned matrices need deg ~ tens; raise ``degree`` (and probes)
+for stiffer spectra, or switch to SLQ which adapts to the spectrum.
+
+Batch-polymorphic like the rest of the package: give it a `BatchedOperator`
+and probes (B, n, k) and every quantity (bounds, coefficients, estimates)
+carries the leading batch axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.estimators.hutchinson import TraceEstimate, make_probes, mean_sem
+from repro.estimators.matvec import as_operator
+
+__all__ = ["spectral_bounds", "chebyshev_coeffs_log", "logdet_chebyshev"]
+
+
+def spectral_bounds(op, key, *, iters: int = 32, safety: float = 1.05):
+    """(lmin, lmax) bracket for an SPD operator, by matvecs alone.
+
+    Power iteration gives ``lmax``; a second power iteration on the shifted
+    operator ``lmax*I - A`` (largest eigenvalue ``lmax - lmin``) gives
+    ``lmin``.  ``safety`` widens the bracket so the Chebyshev interval
+    certainly contains the spectrum despite early termination.
+    """
+    n = op.shape[-1]
+    batch = getattr(op, "batch", None)
+    shape = (batch, n, 1) if batch else (n, 1)
+    v0 = jax.random.normal(key, shape, dtype=op.dtype)
+
+    def power(mv_fn):
+        def body(_, v):
+            w = mv_fn(v)
+            return w / jnp.linalg.norm(w, axis=-2, keepdims=True)
+        v = lax.fori_loop(0, iters, body, v0)
+        w = mv_fn(v)
+        return (v * w).sum((-2, -1)) / (v * v).sum((-2, -1))
+
+    lmax = power(op.mm) * safety
+    lmax_b = lmax[..., None, None]
+    shifted = power(lambda v: lmax_b * v - op.mm(v))
+    lmin = (lmax - shifted) / safety
+    return jnp.maximum(lmin, lmax * 1e-12), lmax
+
+
+def chebyshev_coeffs_log(lmin, lmax, degree: int, dtype):
+    """(..., degree+1) Chebyshev coefficients of log(x) mapped to [-1, 1].
+
+    Chebyshev–Gauss quadrature at the deg+1 nodes x_q = cos(theta_q):
+    ``c_j = 2/(deg+1) * sum_q log(x(x_q)) cos(j theta_q)`` (halved for j=0)
+    — closed-form in jnp so traced spectral bounds flow straight through.
+    """
+    q = degree + 1
+    theta = (jnp.arange(q, dtype=dtype) + 0.5) * (jnp.pi / q)
+    xq = jnp.cos(theta)                                        # (q,)
+    lmin = jnp.asarray(lmin, dtype)[..., None]
+    lmax = jnp.asarray(lmax, dtype)[..., None]
+    g = jnp.log(0.5 * (lmax - lmin) * xq + 0.5 * (lmax + lmin))  # (..., q)
+    tjk = jnp.cos(jnp.arange(q, dtype=dtype)[:, None] * theta)   # (j, q)
+    c = (2.0 / q) * jnp.einsum("jq,...q->...j", tjk, g)
+    return c.at[..., 0].mul(0.5)
+
+
+def logdet_chebyshev(a, *, degree: int = 64, num_probes: int = 32,
+                     key=None, seed: int = 0, lmin=None, lmax=None,
+                     probe_kind: str = "rademacher",
+                     mesh=None, axis_name: str = "rows") -> TraceEstimate:
+    """Estimate ``log|det(A)|`` of an SPD matrix/operator/stack.
+
+    Returns a `TraceEstimate` — ``est`` is the logdet estimate (batched when
+    ``a`` is a (B, n, n) stack), ``sem`` its Monte-Carlo standard error
+    (which does NOT include the deterministic truncation bias; see module
+    docstring for the degree trade-off).
+    """
+    if degree < 1:
+        raise ValueError(f"degree must be >= 1, got {degree}")
+    op = as_operator(a, mesh=mesh, axis_name=axis_name)
+    n = op.shape[-1]
+    dtype = op.dtype
+    batch = getattr(op, "batch", None)
+    if key is None:
+        key = jax.random.PRNGKey(seed)
+    kb, kp = jax.random.split(key)
+
+    if lmin is None or lmax is None:
+        lo, hi = spectral_bounds(op, kb)
+        lmin = lo if lmin is None else jnp.asarray(lmin, dtype)
+        lmax = hi if lmax is None else jnp.asarray(lmax, dtype)
+    lmin = jnp.broadcast_to(jnp.asarray(lmin, dtype), (batch,) if batch else ())
+    lmax = jnp.broadcast_to(jnp.asarray(lmax, dtype), (batch,) if batch else ())
+    c = chebyshev_coeffs_log(lmin, lmax, degree, dtype)   # (..., deg+1)
+
+    center = (lmax + lmin)[..., None, None]
+    width = (lmax - lmin)[..., None, None]
+
+    def mv_b(v):                       # spectrum-normalized operator B
+        return (2.0 * op.mm(v) - center * v) / width
+
+    v = make_probes(kp, n, num_probes, kind=probe_kind, dtype=dtype,
+                    batch_shape=(batch,) if batch else ())
+    w_prev, w = v, mv_b(v)
+    samples = (c[..., 0, None] * (v * v).sum(-2)
+               + c[..., 1, None] * (v * w).sum(-2))       # (..., k)
+
+    def body(j, carry):
+        w_prev, w, samples = carry
+        w_next = 2.0 * mv_b(w) - w_prev
+        cj = jnp.take(c, j, axis=-1)[..., None]
+        samples = samples + cj * (v * w_next).sum(-2)
+        return w, w_next, samples
+
+    _, _, samples = lax.fori_loop(2, degree + 1, body, (w_prev, w, samples))
+    est, sem = mean_sem(samples)
+    return TraceEstimate(est, sem, samples)

@@ -1,0 +1,120 @@
+"""Stochastic Lanczos Quadrature for log-determinant (Ubaru–Chen–Saad).
+
+Per unit probe ``u``, ``m`` Lanczos steps on SPD ``A`` build an orthonormal
+Krylov basis and a tridiagonal ``T (m, m)``; the Gauss quadrature rule hidden
+in ``T`` gives
+
+    u^T log(A) u ~= e_1^T log(T) e_1 = sum_k tau_k^2 log(theta_k)
+
+with ``(theta, tau)`` the eigenvalues of ``T`` and first components of its
+eigenvectors.  Averaging ``n * (quadrature)`` over Rademacher probes
+estimates ``tr(log A) = logdet(A)``.
+
+Compared to the Chebyshev expansion (chebyshev.py) SLQ needs no spectral
+bounds and adapts its quadrature nodes to the actual spectrum — quadrature
+error decays ~ exp(-4m / sqrt(cond)) — at the price of keeping the ``m``
+basis vectors resident for re-orthogonalization (O(m n k) memory here;
+classical three-term Lanczos drifts in floating point without it).
+
+The whole pipeline is one ``lax.fori_loop`` over a (..., n, k) probe slab —
+every Lanczos step is a single blocked matvec through the operator backend
+(dense / batched / mesh-sharded), and the final eigendecompositions batch
+over probes (and stack entries) in one `eigh` call.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.estimators.hutchinson import TraceEstimate, make_probes, mean_sem
+from repro.estimators.matvec import as_operator
+
+__all__ = ["lanczos", "logdet_slq"]
+
+
+def lanczos(mm, v0: jax.Array, num_steps: int):
+    """Blocked Lanczos with full re-orthogonalization.
+
+    ``mm`` maps (..., n, k) -> (..., n, k); ``v0`` is a slab of k starting
+    vectors (normalized internally).  Returns ``(alpha, beta)`` with shapes
+    (..., k, m) and (..., k, m-1): per-column tridiagonal coefficients.
+
+    On exact breakdown (Krylov space exhausted, beta ~ 0) the recurrence
+    continues with a zero vector: the trailing T block becomes zero and
+    carries no e_1 weight, so quadrature results are unaffected.
+    """
+    m = num_steps
+    norm0 = jnp.linalg.norm(v0, axis=-2, keepdims=True)
+    q = v0 / norm0
+    shape = q.shape                                     # (..., n, k)
+    basis0 = jnp.zeros((m, *shape), q.dtype)
+    alpha0 = jnp.zeros((m, *shape[:-2], shape[-1]), q.dtype)
+    beta0 = jnp.zeros((m, *shape[:-2], shape[-1]), q.dtype)
+    eps = jnp.finfo(q.dtype).eps
+
+    def body(j, carry):
+        basis, alpha, beta, q, q_prev, b_prev = carry
+        basis = basis.at[j].set(q)
+        w = mm(q)
+        a_j = (q * w).sum(-2)                            # (..., k)
+        w = w - a_j[..., None, :] * q - b_prev[..., None, :] * q_prev
+        # full re-orthogonalization against the basis so far (rows > j are
+        # zero and project out nothing)
+        proj = (basis * w).sum(-2)                       # (m, ..., k)
+        w = w - (basis * proj[..., None, :]).sum(0)
+        b_j = jnp.linalg.norm(w, axis=-2)                # (..., k)
+        safe = jnp.where(b_j > eps, b_j, 1.0)
+        q_next = jnp.where((b_j > eps)[..., None, :], w / safe[..., None, :],
+                           jnp.zeros_like(w))
+        alpha = alpha.at[j].set(a_j)
+        beta = beta.at[j].set(b_j)
+        return basis, alpha, beta, q_next, q, b_j
+
+    zeros = jnp.zeros(shape[:-2] + (shape[-1],), q.dtype)
+    _, alpha, beta, _, _, _ = lax.fori_loop(
+        0, m, body, (basis0, alpha0, beta0, q, jnp.zeros_like(q), zeros))
+    alpha = jnp.moveaxis(alpha, 0, -1)                   # (..., k, m)
+    beta = jnp.moveaxis(beta[:-1], 0, -1)                # (..., k, m-1)
+    return alpha, beta
+
+
+def logdet_slq(a, *, num_steps: int = 25, num_probes: int = 32,
+               key=None, seed: int = 0, mesh=None,
+               axis_name: str = "rows") -> TraceEstimate:
+    """Estimate ``log|det(A)|`` of an SPD matrix/operator/stack via SLQ.
+
+    Returns a `TraceEstimate` (batched for (B, n, n) stacks): ``est`` is the
+    logdet estimate, ``sem`` the Monte-Carlo standard error over probes.
+    """
+    op = as_operator(a, mesh=mesh, axis_name=axis_name)
+    n = op.shape[-1]
+    m = min(num_steps, n)
+    dtype = op.dtype
+    batch = getattr(op, "batch", None)
+    if key is None:
+        key = jax.random.PRNGKey(seed)
+
+    v0 = make_probes(key, n, num_probes, dtype=dtype,
+                     batch_shape=(batch,) if batch else ())
+    alpha, beta = lanczos(op.mm, v0, m)
+
+    # tridiagonal T per probe -> Gauss quadrature nodes/weights, batched eigh
+    diag = alpha[..., None] * jnp.eye(m, dtype=dtype)
+    upper = beta_pad(beta, m)[..., None] * jnp.eye(m, k=1, dtype=dtype)
+    t = diag + upper + jnp.swapaxes(upper, -1, -2)
+    theta, u = jnp.linalg.eigh(t)
+    tau2 = u[..., 0, :] ** 2                            # e_1 weights (..., k, m)
+    # Zero-block eigenvalues from early breakdown arrive as theta ~ 0 with
+    # tau ~ 0; clip so log stays finite before the weight kills the term.
+    tiny = jnp.asarray(jnp.finfo(dtype).tiny, dtype)
+    quad = (tau2 * jnp.log(jnp.maximum(theta, tiny))).sum(-1)   # (..., k)
+    samples = jnp.asarray(n, dtype) * quad
+    est, sem = mean_sem(samples)
+    return TraceEstimate(est, sem, samples)
+
+
+def beta_pad(beta: jax.Array, m: int) -> jax.Array:
+    """(..., k, m-1) off-diagonals -> (..., k, m) padded for diag placement."""
+    pad = [(0, 0)] * (beta.ndim - 1) + [(0, 1)]
+    return jnp.pad(beta, pad)

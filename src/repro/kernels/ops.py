@@ -13,10 +13,12 @@ import jax
 
 from repro.kernels import ref as _ref
 from repro.kernels.condense_step import rank1_update_pallas
+from repro.kernels.matvec import matvec_pallas
 from repro.kernels.panel_factor import panel_factor_pallas
 from repro.kernels.panel_update import panel_update_pallas
 
-__all__ = ["rank1_update", "panel_update", "panel_factor_vmem", "on_tpu"]
+__all__ = ["rank1_update", "panel_update", "panel_factor_vmem", "matvec",
+           "on_tpu"]
 
 
 @functools.lru_cache(maxsize=1)
@@ -32,6 +34,19 @@ def rank1_update(a: jax.Array, pc: jax.Array, pr: jax.Array, **kw) -> jax.Array:
 def panel_update(a: jax.Array, c: jax.Array, r: jax.Array, **kw) -> jax.Array:
     """Fused a -= c @ r; Pallas on TPU, interpret elsewhere."""
     return panel_update_pallas(a, c, r, interpret=not on_tpu(), **kw)
+
+
+def matvec(a: jax.Array, x: jax.Array, **kw) -> jax.Array:
+    """Tiled a @ x (vector or multi-vector); Pallas on TPU, jnp elsewhere.
+
+    Unlike the update kernels (whose interpret mode is fast enough for
+    validation-sized inputs), the estimators issue thousands of matvecs — on
+    non-TPU backends we fall through to the XLA-fused reference instead of
+    the Python interpreter.
+    """
+    if on_tpu():
+        return matvec_pallas(a, x, **kw)
+    return _ref.matvec_ref(a, x)
 
 
 def panel_factor_vmem(panel: jax.Array, m0, r_pos=0):

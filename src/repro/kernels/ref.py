@@ -4,7 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["rank1_update_ref", "panel_update_ref"]
+__all__ = ["rank1_update_ref", "panel_update_ref", "matvec_ref"]
 
 
 def rank1_update_ref(a: jax.Array, pc: jax.Array, pr: jax.Array) -> jax.Array:
@@ -15,3 +15,8 @@ def rank1_update_ref(a: jax.Array, pc: jax.Array, pr: jax.Array) -> jax.Array:
 def panel_update_ref(a: jax.Array, c: jax.Array, r: jax.Array) -> jax.Array:
     """a (M, N) - c (M, K) @ r (K, N)."""
     return a - c @ r
+
+
+def matvec_ref(a: jax.Array, x: jax.Array) -> jax.Array:
+    """a (M, N) @ x (N,) or (N, K)."""
+    return a @ x.astype(a.dtype)

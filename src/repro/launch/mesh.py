@@ -3,27 +3,28 @@
 Defined as FUNCTIONS (not module-level constants) so importing this module
 never touches jax device state — the dry-run must set XLA_FLAGS before the
 first jax call, and smoke tests must keep seeing the single real device.
+Mesh creation goes through `repro._compat.make_mesh` so the same code runs
+on jax versions with and without ``jax.sharding.AxisType``.
 """
 from __future__ import annotations
 
-import numpy as np
-
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro._compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """16x16 chips per pod ("data", "model"); 2 pods add a leading "pod"."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_rows_mesh(n: int | None = None, axis_name: str = "rows") -> Mesh:
     """1-D mesh for the logdet core (paper's P processors)."""
     n = n or jax.device_count()
-    return jax.make_mesh((n,), (axis_name,), axis_types=(AxisType.Auto,))
+    return make_mesh((n,), (axis_name,))
 
 
 def make_mesh_like(spec: str) -> Mesh:
@@ -32,9 +33,7 @@ def make_mesh_like(spec: str) -> Mesh:
     if len(dims) == 1:
         return make_rows_mesh(dims[0])
     if len(dims) == 2:
-        return jax.make_mesh(dims, ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+        return make_mesh(dims, ("data", "model"))
     if len(dims) == 3:
-        return jax.make_mesh(dims, ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
+        return make_mesh(dims, ("pod", "data", "model"))
     raise ValueError(spec)

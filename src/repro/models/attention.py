@@ -197,8 +197,11 @@ def attn_apply(p, x, cfg: ModelConfig, *, mode: str = "train",
             ck = jnp.where(slot, k.astype(cache["k"].dtype), cache["k"])
             cv = jnp.where(slot, v.astype(cache["v"].dtype), cache["v"])
         else:
-            ck = lax.dynamic_update_slice(cache["k"], k, (0, cache_pos, 0, 0))
-            cv = lax.dynamic_update_slice(cache["v"], v, (0, cache_pos, 0, 0))
+            # index dtypes must match exactly on jax 0.4.x (no int promotion)
+            pos = jnp.asarray(cache_pos)
+            z = jnp.zeros((), pos.dtype)
+            ck = lax.dynamic_update_slice(cache["k"], k, (z, pos, z, z))
+            cv = lax.dynamic_update_slice(cache["v"], v, (z, pos, z, z))
         new_cache = {"k": ck, "v": cv}
         k, v = ck, cv
         s = ck.shape[1]

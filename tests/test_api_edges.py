@@ -1,0 +1,102 @@
+"""Edge cases of the public API: pad_to_multiple embedding and slogdet on
+degenerate inputs (N=0, N=1, non-square, unknown method, singular),
+checked for numpy.linalg.slogdet consistency."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import METHODS, pad_to_multiple, slogdet, slogdet_condense
+
+
+# ---------------------------------------------------------- pad_to_multiple
+
+@pytest.mark.parametrize("n,mult", [(5, 4), (1, 8), (7, 7), (12, 5)])
+def test_pad_to_multiple_shape_and_values(n, mult, rng):
+    a = jnp.asarray(rng.standard_normal((n, n)))
+    out = pad_to_multiple(a, mult)
+    n_pad = -(-n // mult) * mult
+    assert out.shape == (n_pad, n_pad)
+    np.testing.assert_array_equal(np.asarray(out[:n, :n]), np.asarray(a))
+    tail = np.asarray(out[n:, n:])
+    np.testing.assert_array_equal(tail, np.eye(n_pad - n))
+    assert not np.asarray(out[:n, n:]).any()
+    assert not np.asarray(out[n:, :n]).any()
+
+
+def test_pad_to_multiple_noop_when_divisible(rng):
+    a = jnp.asarray(rng.standard_normal((8, 8)))
+    assert pad_to_multiple(a, 4) is a
+
+
+def test_pad_to_multiple_preserves_logdet(rng):
+    a = rng.standard_normal((10, 10))
+    s_ref, ld_ref = np.linalg.slogdet(a)
+    s, ld = slogdet_condense(pad_to_multiple(jnp.asarray(a), 8))
+    assert float(s) == pytest.approx(s_ref)
+    np.testing.assert_allclose(float(ld), ld_ref, rtol=1e-9)
+
+
+def test_pad_to_multiple_empty():
+    out = pad_to_multiple(jnp.zeros((0, 0)), 4)
+    assert out.shape == (0, 0)
+
+
+# ---------------------------------------------------------------- slogdet
+
+def test_slogdet_empty_matrix():
+    """det of the 0x0 matrix is 1 (empty product) — numpy semantics."""
+    s_ref, ld_ref = np.linalg.slogdet(np.zeros((0, 0)))
+    s, ld = slogdet(np.zeros((0, 0)), method="mc")
+    assert float(s) == s_ref == 1.0
+    assert float(ld) == ld_ref == 0.0
+
+
+@pytest.mark.parametrize("val", [2.5, -3.0, 1e-30])
+def test_slogdet_one_by_one(val):
+    s_ref, ld_ref = np.linalg.slogdet(np.array([[val]]))
+    s, ld = slogdet(np.array([[val]]), method="mc")
+    assert float(s) == pytest.approx(s_ref)
+    np.testing.assert_allclose(float(ld), ld_ref, rtol=1e-12)
+
+
+@pytest.mark.parametrize("shape", [(3, 4), (4, 3), (4,), (2, 2, 2)])
+def test_slogdet_rejects_non_square(shape):
+    with pytest.raises(ValueError, match="square"):
+        slogdet(np.zeros(shape))
+
+
+def test_slogdet_rejects_unknown_method():
+    with pytest.raises(ValueError, match="unknown method"):
+        slogdet(np.eye(4), method="cholesky")
+
+
+def test_slogdet_method_list_is_exhaustive():
+    """Every advertised method must dispatch (mesh-less ones here)."""
+    a = np.eye(6) * 2.0
+    for method in METHODS:
+        if method in ("pmc", "pmc_blocked", "pge", "plu"):
+            with pytest.raises(ValueError, match="mesh"):
+                slogdet(a, method=method)
+            continue
+        s, ld = slogdet(a, method=method)
+        np.testing.assert_allclose(float(ld), 6 * np.log(2.0), rtol=1e-2)
+
+
+def test_slogdet_singular_consistency():
+    """Singular input: numpy returns (0, -inf); condensation's static-shape
+    pipeline must agree up to roundoff (sign 0 or logdet -> -inf/very small).
+    """
+    a = np.ones((8, 8))
+    s_ref, ld_ref = np.linalg.slogdet(a)
+    assert s_ref == 0.0 and ld_ref == -np.inf
+    s, ld = slogdet(a, method="mc")
+    assert float(ld) == -np.inf or float(ld) < -30
+    if float(ld) == -np.inf:
+        assert float(s) == 0.0
+
+
+def test_logdet_discards_sign():
+    from repro.core import logdet
+    a = -np.eye(3)  # det = -1, log|det| = 0
+    np.testing.assert_allclose(float(logdet(a, method="mc")), 0.0, atol=1e-12)

@@ -28,7 +28,8 @@ def test_parallel_eight_devices():
         """
 import sys; sys.path.insert(0, %r)
 from repro.core import slogdet
-mesh = jax.make_mesh((8,), ("rows",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro._compat import make_mesh
+mesh = make_mesh((8,), ("rows",))
 rng = np.random.default_rng(11)
 for n in (64, 100):
     a = rng.standard_normal((n, n))
@@ -51,8 +52,8 @@ def test_parallel_matches_across_device_counts():
     code = """
 import sys; sys.path.insert(0, %r)
 from repro.core import slogdet
-mesh = jax.make_mesh((jax.device_count(),), ("rows",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro._compat import make_mesh
+mesh = make_mesh((jax.device_count(),), ("rows",))
 rng = np.random.default_rng(42)
 a = rng.standard_normal((96, 96))
 s, ld = slogdet(a, method="pmc", mesh=mesh)
