@@ -1,0 +1,117 @@
+"""Benchmark-regression gate: fresh estimator bench vs committed baseline.
+
+CI runs ``benchmarks.estimators_bench --sizes 256,512`` and then this
+check, which compares ``bench_out/estimators.json`` against the committed
+``bench_out/estimators_baseline.json`` record-by-record (keyed on
+(n, method, operator)) and FAILS on
+
+  time    > 2x baseline * speed + 0.25 s slack
+  rel_err > 3x baseline + 1e-8 floor     (floor keeps exact methods from
+                                          tripping on roundoff noise)
+
+``speed`` calibrates the gate to the machine running it: the baseline was
+timed on one box, CI re-times on a shared runner that may simply be
+slower.  The deterministic exact-method records (mc_staged etc.) act as
+the runner-speed probe — speed = median(fresh/baseline seconds) over
+them, clamped to >= 1 so a fast runner never loosens the gate.  The
+absolute slack absorbs jitter on sub-second runs.
+
+at the gated sizes N in {256, 512, 529}.  529 = 23^2 is the Kronecker
+record for the 512 request (nA = nB = 23).  Baseline records with no
+fresh counterpart are reported but do not fail the gate (method sets may
+shrink deliberately); a fresh run missing EVERY gated record fails.
+
+Refresh the baseline after a legitimate perf/accuracy change:
+
+    PYTHONPATH=src python -m benchmarks.estimators_bench \
+        --sizes 256,512 --operator all --iters 3
+    cp bench_out/estimators.json bench_out/estimators_baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+BENCH_DIR = Path(__file__).resolve().parent.parent / "bench_out"
+GATED_N = (256, 512, 529)
+TIME_FACTOR = 2.0
+TIME_SLACK = 0.25
+ERR_FACTOR = 3.0
+ERR_FLOOR = 1e-8
+EXACT = {"mc", "mc_staged", "mc_blocked", "ge"}
+
+
+def speed_ratio(baseline: dict, fresh: dict) -> float:
+    """Runner-speed calibration from deterministic exact-method records."""
+    ratios = sorted(
+        fresh[k]["seconds"] / base["seconds"]
+        for k, base in baseline.items()
+        if k[1] in EXACT and k in fresh and base["seconds"] > 0)
+    if not ratios:
+        return 1.0
+    return max(1.0, ratios[len(ratios) // 2])
+
+
+def key(rec):
+    return (rec["n"], rec["method"], rec.get("operator", "dense"))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", type=Path,
+                    default=BENCH_DIR / "estimators.json")
+    ap.add_argument("--baseline", type=Path,
+                    default=BENCH_DIR / "estimators_baseline.json")
+    args = ap.parse_args(argv)
+
+    baseline = {key(r): r for r in json.loads(args.baseline.read_text())
+                if r["n"] in GATED_N}
+    fresh = {key(r): r for r in json.loads(args.fresh.read_text())
+             if r["n"] in GATED_N}
+    if not baseline:
+        print(f"FAIL: no gated records (N in {GATED_N}) in {args.baseline}")
+        return 1
+
+    speed = speed_ratio(baseline, fresh)
+    print(f"runner speed calibration: x{speed:.2f} vs baseline machine")
+
+    failures, compared = [], 0
+    for k, base in sorted(baseline.items()):
+        got = fresh.get(k)
+        if got is None:
+            print(f"note: baseline record {k} missing from fresh run")
+            continue
+        compared += 1
+        t_lim = TIME_FACTOR * base["seconds"] * speed + TIME_SLACK
+        e_lim = ERR_FACTOR * base["rel_err"] + ERR_FLOOR
+        flags = []
+        if got["seconds"] > t_lim:
+            flags.append("TIME REGRESSION")
+            failures.append(
+                f"{k}: {got['seconds']:.3f}s > limit {t_lim:.3f}s "
+                f"(baseline {base['seconds']:.3f}s)")
+        if got["rel_err"] > e_lim:
+            flags.append("ERROR REGRESSION")
+            failures.append(
+                f"{k}: rel_err {got['rel_err']:.3e} > limit {e_lim:.3e} "
+                f"(baseline {base['rel_err']:.3e})")
+        print(f"{str(k):48s} t={got['seconds']:.3f}s/{t_lim:.3f}s "
+              f"err={got['rel_err']:.2e}/{e_lim:.2e}  "
+              f"{', '.join(flags) or 'ok'}")
+
+    if compared == 0:
+        print("FAIL: fresh run has none of the gated baseline records")
+        return 1
+    if failures:
+        print(f"\nFAIL: {len(failures)} regression(s):")
+        for f in failures:
+            print(" -", f)
+        return 1
+    print(f"\nOK: {compared} records within gates")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

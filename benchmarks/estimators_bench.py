@@ -1,18 +1,31 @@
-"""Exact vs stochastic log-determinant: wall time and relative error by N.
+"""Exact vs stochastic log-determinant: wall time and relative error by N,
+across operator structures.
 
-For each size the harness builds a seeded well-conditioned SPD matrix,
-computes the f64 LAPACK reference once, then times every requested method
-(median of --iters after a compile warm-up) and records the relative error.
+For each size the harness builds a seeded well-conditioned SPD input —
+dense, or one of the structured implicit backends — computes an exact
+reference logdet, then times every requested method (median of --iters
+after a compile warm-up) and records the relative error.  Structures:
+
+  dense      in-memory (n, n) matrix; all methods apply
+  kron       KroneckerOperator(A, B) with nA ~ nB ~ sqrt(n); reference is
+             the exact identity nB*logdet(A) + nA*logdet(B)
+  toeplitz   SPD ToeplitzOperator from a geometrically decaying symbol
+  stencil    1-D Laplacian-style StencilOperator (offsets -1/0/+1)
+
+Exact condensation methods need a materialized matrix, so structured runs
+cover the estimator methods only (others are skipped with a note).
 Results go to bench_out/estimators.json as a list of records
 
-    {"n": ..., "method": ..., "seconds": ..., "logdet": ...,
-     "rel_err": ..., "sem": ...}
+    {"n": ..., "method": ..., "operator": ..., "seconds": ...,
+     "logdet": ..., "rel_err": ..., "sem": ...}
 
 plus a CSV twin for the roofline tooling.  Defaults stay CPU-friendly
 (N up to 2048); --full sweeps the paper-scale range N in {512..8192} where
 the O(N^3)-vs-O(N^2 * probes) crossover is unmistakable.
 
     PYTHONPATH=src python -m benchmarks.estimators_bench
+    PYTHONPATH=src python -m benchmarks.estimators_bench --operator kron \
+        --methods chebyshev,slq
     PYTHONPATH=src python -m benchmarks.estimators_bench --full \
         --methods mc_staged,chebyshev,slq
 """
@@ -28,6 +41,7 @@ from benchmarks._common import OUT_DIR, timeit, write_csv
 DEFAULT_SIZES = (512, 1024, 2048)
 FULL_SIZES = (512, 1024, 2048, 4096, 8192)
 EXACT = {"mc", "mc_staged", "mc_blocked", "ge"}
+OPERATORS = ("dense", "kron", "toeplitz", "stencil")
 
 
 def make_spd(n: int, seed: int) -> np.ndarray:
@@ -36,10 +50,46 @@ def make_spd(n: int, seed: int) -> np.ndarray:
     return x @ x.T / (2 * n) + 2.0 * np.eye(n)
 
 
+def make_operator(structure: str, n: int, seed: int):
+    """(operator_or_matrix, exact_reference_logdet, actual_n)."""
+    import jax.numpy as jnp
+
+    from repro.estimators import (
+        KroneckerOperator, StencilOperator, ToeplitzOperator,
+    )
+
+    if structure == "dense":
+        a = make_spd(n, seed)
+        return jnp.asarray(a), float(np.linalg.slogdet(a)[1]), n
+    if structure == "kron":
+        na = max(int(round(np.sqrt(n))), 1)
+        a, b = make_spd(na, seed), make_spd(na, seed + 1)
+        # logdet(A (x) B) = nB logdet(A) + nA logdet(B): exact, no n x n
+        ref = na * float(np.linalg.slogdet(a)[1]) \
+            + na * float(np.linalg.slogdet(b)[1])
+        return KroneckerOperator(jnp.asarray(a), jnp.asarray(b)), ref, na * na
+    if structure == "toeplitz":
+        c = 0.5 ** np.arange(n, dtype=np.float64)
+        c[0] = 2.5                       # diagonally dominant -> SPD
+        i = np.arange(n)
+        dense = c[np.abs(i[:, None] - i[None, :])]
+        ref = float(np.linalg.slogdet(dense)[1])
+        return ToeplitzOperator(jnp.asarray(c)), ref, n
+    if structure == "stencil":
+        # 1-D Laplacian + shift: SPD tridiagonal
+        dense = 2.5 * np.eye(n) - np.eye(n, k=1) - np.eye(n, k=-1)
+        ref = float(np.linalg.slogdet(dense)[1])
+        op = StencilOperator((-1, 0, 1),
+                             jnp.asarray([-1.0, 2.5, -1.0]), n=n)
+        return op, ref, n
+    raise ValueError(f"unknown operator structure {structure!r}; "
+                     f"choose from {OPERATORS}")
+
+
 def main(argv=None):
     import jax
     jax.config.update("jax_enable_x64", True)
-    import jax.numpy as jnp
+    import jax.numpy as jnp  # noqa: F401  (x64 must be set before use)
 
     from repro.core import slogdet
 
@@ -49,6 +99,9 @@ def main(argv=None):
                     help="sweep the paper-scale range 512..8192")
     ap.add_argument("--methods", type=str,
                     default="mc_staged,chebyshev,slq")
+    ap.add_argument("--operator", type=str, default="dense",
+                    help="comma list of input structures: "
+                         "dense|kron|toeplitz|stencil (or 'all')")
     ap.add_argument("--num-probes", type=int, default=32)
     ap.add_argument("--degree", type=int, default=64)
     ap.add_argument("--num-steps", type=int, default=25)
@@ -61,48 +114,55 @@ def main(argv=None):
     else:
         sizes = FULL_SIZES if args.full else DEFAULT_SIZES
     methods = args.methods.split(",")
+    structures = (OPERATORS if args.operator == "all"
+                  else tuple(args.operator.split(",")))
 
     records = []
-    for n in sizes:
-        a_np = make_spd(n, args.seed)
-        _, ld_ref = np.linalg.slogdet(a_np)
-        a = jnp.asarray(a_np)
+    for structure in structures:
+        for n in sizes:
+            a, ld_ref, n_actual = make_operator(structure, n, args.seed)
 
-        for method in methods:
-            kw = {}
-            if method == "chebyshev":
-                kw = dict(num_probes=args.num_probes, degree=args.degree,
-                          seed=args.seed)
-            elif method == "slq":
-                kw = dict(num_probes=args.num_probes,
-                          num_steps=args.num_steps, seed=args.seed)
+            for method in methods:
+                if structure != "dense" and method not in ("chebyshev",
+                                                           "slq"):
+                    print(f"n={n:5d} {method:>10s}: skipped (needs a "
+                          f"materialized matrix, operator={structure})")
+                    continue
+                kw = {}
+                if method == "chebyshev":
+                    kw = dict(num_probes=args.num_probes, degree=args.degree,
+                              seed=args.seed)
+                elif method == "slq":
+                    kw = dict(num_probes=args.num_probes,
+                              num_steps=args.num_steps, seed=args.seed)
 
-            def run(x):
-                return slogdet(x, method=method, **kw)
+                def run(x):
+                    return slogdet(x, method=method, **kw)
 
-            t = timeit(run, a, warmup=1, iters=args.iters)
-            rec = {"n": n, "method": method, "seconds": t,
-                   "logdet_ref": float(ld_ref)}
-            if method in EXACT:
-                _, ld = run(a)
-            else:
-                # one estimator pass yields both value and standard error
-                from repro.estimators import estimate_logdet
-                res = estimate_logdet(a, method=method, **kw)
-                ld = res.est
-                rec["sem"] = float(res.sem)
-            rec["logdet"] = float(ld)
-            rec["rel_err"] = abs(float(ld) - ld_ref) / abs(ld_ref)
-            records.append(rec)
-            print(f"n={n:5d} {method:>10s}: {t*1e3:9.1f} ms  "
-                  f"rel_err={rec['rel_err']:.2e}")
+                t = timeit(run, a, warmup=1, iters=args.iters)
+                rec = {"n": n_actual, "method": method,
+                       "operator": structure, "seconds": t,
+                       "logdet_ref": ld_ref}
+                if method in EXACT:
+                    _, ld = run(a)
+                else:
+                    # one estimator pass yields both value and standard error
+                    from repro.estimators import estimate_logdet
+                    res = estimate_logdet(a, method=method, **kw)
+                    ld = res.est
+                    rec["sem"] = float(res.sem)
+                rec["logdet"] = float(ld)
+                rec["rel_err"] = abs(float(ld) - ld_ref) / abs(ld_ref)
+                records.append(rec)
+                print(f"n={n_actual:5d} {structure:>8s} {method:>10s}: "
+                      f"{t*1e3:9.1f} ms  rel_err={rec['rel_err']:.2e}")
 
     OUT_DIR.mkdir(exist_ok=True)
     out = OUT_DIR / "estimators.json"
     out.write_text(json.dumps(records, indent=2))
     write_csv("estimators.csv",
-              ["n", "method", "seconds", "logdet", "rel_err"],
-              [[r["n"], r["method"], f"{r['seconds']:.6f}",
+              ["n", "method", "operator", "seconds", "logdet", "rel_err"],
+              [[r["n"], r["method"], r["operator"], f"{r['seconds']:.6f}",
                 f"{r['logdet']:.6f}", f"{r['rel_err']:.3e}"]
                for r in records])
     print(f"estimators -> {out}")

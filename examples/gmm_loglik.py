@@ -4,19 +4,25 @@ log-likelihood of a Gaussian mixture whose covariances are LARGE matrices.
     log N(x | mu, Sigma) = -1/2 [ d log(2 pi) + logdet(Sigma)
                                   + (x-mu)^T Sigma^-1 (x-mu) ]
 
-The logdet(Sigma) terms for ALL mixture components are computed in one
-``logdet_batched`` call per EM iteration over the (K, d, d) covariance
-stack: exact parallel condensation for small d, or the stochastic
-estimators (``--logdet chebyshev|slq``) which make the logdet term
-sub-cubic.  (The Mahalanobis ``solve`` in the density is still O(d^3)
-here — replacing it with CG on the same matvec backends is the
-remaining step to a fully sub-cubic E-step; see ROADMAP.)
-Responsibilities and the EM-style refit keep running until the mixture
-log-likelihood converges.
+Two costs per EM iteration, and two regimes for each:
+
+  logdet(Sigma)  --logdet exact        parallel condensation, O(d^3)
+                 --logdet chebyshev|slq stochastic estimators, O(matvecs)
+  Mahalanobis    --solver direct        jnp.linalg.solve, O(d^3)
+                 --solver cg            matrix-free conjugate gradient on
+                                        the SAME operator, O(iters) matvecs
+
+With ``--solver cg`` the covariances are never materialized: each
+component's Sigma = Xc^T diag(w) Xc / sum(w) + ridge*I is held as an
+`EmpiricalCovOperator` (~15 lines, duck-typing the `LinearOperator`
+protocol) whose matvec is two (n, d) GEMMs — O(n d) per probe column —
+and whose diagonal is free, feeding both the logdet estimators and the
+Jacobi-preconditioned CG.  The whole E-step is sub-cubic in d.
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/gmm_loglik.py --dim 256 --components 3
     PYTHONPATH=src python examples/gmm_loglik.py --dim 512 --logdet slq
+    PYTHONPATH=src python examples/gmm_loglik.py --dim 512 --solver cg
 """
 import argparse
 
@@ -27,7 +33,32 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import logdet_batched, slogdet
+from repro.estimators import LinearOperator, cg_solve, estimate_logdet
 from repro.launch.mesh import make_rows_mesh
+
+
+class EmpiricalCovOperator(LinearOperator):
+    """Implicit Sigma = Xc^T diag(w) Xc / sum(w) + ridge*I, never built.
+
+    ``xc (n, d)`` centered data, ``w (n,)`` responsibilities.  The matvec
+    is two tall-skinny GEMMs; the diagonal (for CG preconditioning and
+    variance reduction) is a single weighted column-square sum.
+    """
+
+    def __init__(self, xc, w, ridge):
+        self.xc = xc
+        self.w = w
+        self.wsum = w.sum() + 1e-9
+        self.ridge = ridge
+        self.shape = (xc.shape[1], xc.shape[1])
+        self.dtype = xc.dtype
+
+    def mm(self, v):  # (d, k) -> (d, k)
+        return (self.xc.T @ (self.w[:, None] * (self.xc @ v))) / self.wsum \
+            + self.ridge * v
+
+    def diag(self):
+        return (self.w[:, None] * self.xc**2).sum(0) / self.wsum + self.ridge
 
 
 def batched_logdets(covs, *, how: str, mesh, seed: int = 0):
@@ -44,11 +75,24 @@ def batched_logdets(covs, *, how: str, mesh, seed: int = 0):
     return logdet_batched(covs, method=how, **kw)
 
 
-def gaussian_loglik(x, mu, cov, ld):
-    """Mean log-density of rows of x under N(mu, cov); ld = logdet(cov)."""
+def operator_logdets(ops, *, how: str, seed: int = 0):
+    """(K,) logdets of a list of implicit covariance operators."""
+    kw = dict(num_probes=32, seed=seed)
+    if how == "chebyshev":
+        kw["degree"] = 64
+    return jnp.stack([estimate_logdet(op, method=how, **kw).est
+                      for op in ops])
+
+
+def gaussian_loglik(x, mu, solve_fn, ld):
+    """Mean log-density of rows of x under N(mu, Sigma); ld = logdet(Sigma).
+
+    ``solve_fn`` maps a (d, n) right-hand-side slab to Sigma^{-1} @ rhs —
+    dense factorization or matrix-free CG, the density does not care.
+    """
     d = x.shape[1]
     xc = x - mu
-    sol = jnp.linalg.solve(cov, xc.T)           # (d, n)
+    sol = solve_fn(xc.T)                        # (d, n)
     quad = jnp.einsum("nd,dn->n", xc, sol)
     return -0.5 * (d * jnp.log(2 * jnp.pi) + ld + quad)
 
@@ -62,7 +106,18 @@ def main():
     ap.add_argument("--logdet", choices=("exact", "chebyshev", "slq"),
                     default="exact",
                     help="logdet path for the covariance stack")
+    ap.add_argument("--solver", choices=("direct", "cg"), default="direct",
+                    help="Mahalanobis solve: dense factorization or "
+                         "matrix-free CG on implicit covariance operators")
+    ap.add_argument("--cg-tol", type=float, default=1e-8)
     args = ap.parse_args()
+
+    logdet_how = args.logdet
+    if args.solver == "cg" and logdet_how == "exact":
+        # exact condensation would materialize Sigma; stay matrix-free
+        logdet_how = "slq"
+        print("[--solver cg] switching --logdet exact -> slq "
+              "(keeping the E-step matrix-free)")
 
     rng = np.random.default_rng(0)
     d, k, n = args.dim, args.components, args.samples
@@ -77,31 +132,45 @@ def main():
     ])
     x = jnp.asarray(data)
 
-    # init: random means, identity covs
+    # init: random means; unit covariance == zero-weight operator + ridge 1
     mu = jnp.asarray(true_mu + rng.standard_normal((k, d)))
-    cov = jnp.stack([jnp.eye(d) for _ in range(k)])
     pi = jnp.ones((k,)) / k
+    resp_w = jnp.zeros((x.shape[0], k))
+    ridge = 1.0
 
     for it in range(args.iters):
-        # E-step: one batched logdet over the covariance stack, then the
+        # E-step: per-component logdet + Mahalanobis solve, then the
         # responsibilities via the per-component log-densities
-        lds = batched_logdets(cov, how=args.logdet, mesh=mesh, seed=it)
-        logp = jnp.stack([gaussian_loglik(x, mu[j], cov[j], lds[j])
+        if args.solver == "cg":
+            ops = [EmpiricalCovOperator(x - mu[j], resp_w[:, j], ridge)
+                   for j in range(k)]
+            lds = operator_logdets(ops, how=logdet_how, seed=it)
+            solvers = [
+                (lambda rhs, op=op: cg_solve(op, rhs, tol=args.cg_tol).x)
+                for op in ops]
+        else:
+            cov = jnp.stack([
+                ((resp_w[:, j, None] * (x - mu[j])).T @ (x - mu[j]))
+                / (resp_w[:, j].sum() + 1e-9) + ridge * jnp.eye(d)
+                for j in range(k)])
+            lds = batched_logdets(cov, how=logdet_how, mesh=mesh, seed=it)
+            solvers = [(lambda rhs, c=c: jnp.linalg.solve(c, rhs))
+                       for c in cov]
+        logp = jnp.stack([gaussian_loglik(x, mu[j], solvers[j], lds[j])
                           for j in range(k)], axis=1)
         logp = logp + jnp.log(pi)[None]
         ll = jax.nn.logsumexp(logp, axis=1)
         resp = jnp.exp(logp - ll[:, None])
         print(f"iter {it}: mixture log-likelihood/sample = {ll.mean():.4f}"
-              f"  [logdet: {args.logdet}]")
+              f"  [logdet: {logdet_how}, solver: {args.solver}]")
 
-        # M-step
+        # M-step: means and weights; covariances are re-expressed from
+        # (mu, resp) next E-step — as operators (cg) or dense (direct)
         nk = resp.sum(0) + 1e-9
         pi = nk / nk.sum()
         mu = (resp.T @ x) / nk[:, None]
-        cov = jnp.stack([
-            ((resp[:, j, None] * (x - mu[j])).T @ (x - mu[j])) / nk[j]
-            + 1e-3 * jnp.eye(d)
-            for j in range(k)])
+        resp_w = resp
+        ridge = 1e-3
 
     print("\nfinal mixture weights:", np.round(np.asarray(pi), 3))
     print("mean abs error of recovered means:",

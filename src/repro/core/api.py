@@ -21,6 +21,15 @@ repro/estimators; sub-cubic, matrix-free, mesh-shardable):
   chebyshev     stochastic Chebyshev expansion (Han et al.)       [1 dev|mesh]
   slq           stochastic Lanczos quadrature (Ubaru et al.)      [1 dev|mesh]
 
+Estimator methods also accept any ``repro.estimators.LinearOperator`` —
+structured backends (`KroneckerOperator`, `ToeplitzOperator`,
+`StencilOperator`, ...) reach N >> 10^4 without materializing A:
+
+    slogdet(KroneckerOperator(a, b), method="slq")
+
+An operator input carries its own distribution/structure, so ``mesh`` is
+rejected for it (shard the dense input instead, or use `ShardedOperator`).
+
 Choosing: exact condensation is the right call when you need all digits, a
 sign, or N is small enough for O(N^3) (<~ 4k on one device); the estimators
 when A is huge, implicit, or stacked and ~2-3 significant digits suffice.
@@ -114,6 +123,19 @@ def slogdet(a, *, method: str = "mc", mesh=None, axis_name: str = "rows",
     """
     if method not in METHODS:
         raise ValueError(f"unknown method {method!r}; choose from {METHODS}")
+    from repro.estimators.operators import is_operator as _is_op
+    if _is_op(a):
+        # implicit operator: only the matrix-free estimator methods apply
+        if method not in _ESTIMATOR:
+            raise TypeError(
+                f"method {method!r} needs a materialized matrix; operator "
+                f"inputs require an estimator method {sorted(_ESTIMATOR)}")
+        if mesh is not None:
+            raise TypeError("operator inputs carry their own distribution; "
+                            "mesh is only accepted for dense array inputs")
+        from repro import estimators as _est
+        res = _est.estimate_logdet(a, method=method, **est_kw)
+        return jnp.ones((), res.est.dtype), res.est
     a_arr = a if isinstance(a, jax.Array) else jnp.asarray(a)
     shape = tuple(a_arr.shape)
     if len(shape) != 2 or shape[0] != shape[1]:

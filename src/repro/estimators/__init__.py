@@ -9,12 +9,15 @@ showed wins for huge SPD, implicit, and batched operators:
   hutchinson   probe generation + trace estimation with variance tracking
   chebyshev    stochastic Chebyshev expansion of log on a spectral interval
   slq          stochastic Lanczos quadrature (no spectral bounds needed)
-  matvec       pluggable operator backends: dense, batched stack,
-               mesh-sharded rows + Pallas tiled matvec kernel
+  operators    the `LinearOperator` protocol + backends: dense, batched
+               stack, mesh-sharded rows, Kronecker, Toeplitz, stencil —
+               and matrix-free conjugate gradient (`cg_solve`) on any of
+               them (see operators/README.md)
 
 User-facing entry points: ``repro.core.slogdet(a, method="chebyshev"|"slq")``
-for a single matrix and `logdet_batched` for stacks (GMM covariances).
-All estimators assume SPD input (they estimate ``tr(log A)``).
+for a single matrix or operator and `logdet_batched` for stacks (GMM
+covariances).  All estimators assume SPD input (they estimate
+``tr(log A)``).
 """
 from __future__ import annotations
 
@@ -26,9 +29,10 @@ from repro.estimators.chebyshev import (
 from repro.estimators.hutchinson import (
     TraceEstimate, hutchinson_trace, make_probes, mean_sem,
 )
-from repro.estimators.matvec import (
-    BatchedOperator, DenseOperator, LinearOperator, ShardedOperator,
-    as_operator, rowwise_matvec_specs,
+from repro.estimators.operators import (
+    BatchedOperator, CGResult, DenseOperator, KroneckerOperator,
+    LinearOperator, ShardedOperator, StencilOperator, ToeplitzOperator,
+    as_operator, cg_solve, is_operator, rowwise_matvec_specs,
 )
 from repro.estimators.slq import lanczos, logdet_slq
 
@@ -37,7 +41,9 @@ __all__ = [
     "logdet_chebyshev", "chebyshev_coeffs_log", "spectral_bounds",
     "logdet_slq", "lanczos",
     "LinearOperator", "DenseOperator", "BatchedOperator", "ShardedOperator",
-    "as_operator", "rowwise_matvec_specs",
+    "KroneckerOperator", "ToeplitzOperator", "StencilOperator",
+    "as_operator", "is_operator", "rowwise_matvec_specs",
+    "CGResult", "cg_solve",
     "ESTIMATOR_METHODS", "estimate_logdet", "logdet_batched",
 ]
 
@@ -58,11 +64,25 @@ def estimate_logdet(a, method: str = "chebyshev", **kw) -> TraceEstimate:
 def logdet_batched(stack, *, method: str = "chebyshev", **kw):
     """``log|det|`` of every matrix in an SPD (B, n, n) stack -> (B,).
 
-    ``method`` is an estimator name or ``"mc"`` for the exact condensation
-    core mapped over the stack (the crossover reference: exact is the right
+    ``stack`` is a (B, n, n) array or a batched operator (an operator
+    exposing ``batch`` — e.g. `BatchedOperator` or a duck-typed implicit
+    covariance stack); operators require an estimator method.  ``method``
+    is an estimator name or ``"mc"`` for the exact condensation core
+    mapped over the stack (the crossover reference: exact is the right
     call for small n, estimators for large).  Estimator keywords pass
     through (``num_probes``, ``degree`` / ``num_steps``, ``seed``, ...).
     """
+    if is_operator(stack):
+        if getattr(stack, "batch", None) is None:
+            raise ValueError(
+                "logdet_batched needs a batched operator (with a .batch "
+                "axis); use estimate_logdet for a single operator")
+        if method == "mc":
+            raise TypeError(
+                "method 'mc' needs a materialized (B, n, n) stack; "
+                "operator inputs require an estimator method "
+                f"{ESTIMATOR_METHODS}")
+        return estimate_logdet(stack, method=method, **kw).est
     stack = jnp.asarray(stack)
     if stack.ndim != 3 or stack.shape[1] != stack.shape[2]:
         raise ValueError(f"expected (B, n, n) stack, got {stack.shape}")

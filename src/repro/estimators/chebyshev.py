@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.estimators.hutchinson import TraceEstimate, make_probes, mean_sem
-from repro.estimators.matvec import as_operator
+from repro.estimators.operators import as_operator
 
 __all__ = ["spectral_bounds", "chebyshev_coeffs_log", "logdet_chebyshev"]
 

@@ -30,10 +30,20 @@ class TraceEstimate(NamedTuple):
 
 
 def make_probes(key, n: int, num: int, *, kind: str = "rademacher",
-                dtype=jnp.float64, batch_shape: Tuple[int, ...] = ()):
-    """(*batch_shape, n, num) slab of i.i.d. probe columns, E[v v^T] = I."""
+                dtype=None, batch_shape: Tuple[int, ...] = ()):
+    """(*batch_shape, n, num) slab of i.i.d. probe columns, E[v v^T] = I.
+
+    ``dtype`` should be threaded from the operator (``op.dtype``) so the
+    matvec slab matches it exactly: on float64-enabled hosts a float64
+    default would silently upcast probes for a float32 operator, and
+    mixed-dtype Pallas calls fail on TPU.  When omitted, the canonical
+    default float dtype is used (float32 unless ``jax_enable_x64``).
+    """
     if kind not in PROBE_KINDS:
         raise ValueError(f"unknown probe kind {kind!r}; choose {PROBE_KINDS}")
+    dtype = jnp.result_type(float) if dtype is None else jnp.dtype(dtype)
+    if not jnp.issubdtype(dtype, jnp.floating):
+        raise ValueError(f"probes must be real floating, got {dtype}")
     shape = (*batch_shape, n, num)
     if kind == "rademacher":
         return jax.random.rademacher(key, shape, dtype=dtype)

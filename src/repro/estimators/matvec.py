@@ -1,166 +1,21 @@
-"""Pluggable matvec backends for the matrix-free estimators.
+"""Back-compat shim: the matvec backends moved to a full subsystem.
 
-Every estimator in this package touches the matrix ONLY through products
-``A @ V`` with a slab of probe vectors ``V (n, k)`` — the ``mm`` method of a
-linear operator.  Three backends cover the scenario classes:
-
-  DenseOperator    single in-memory matrix                        [1 dev]
-  BatchedOperator  stack of matrices, one product per batch entry
-                   (`vmap`-style contraction — GMM covariance stacks)
-  ShardedOperator  row-distributed dense matvec over a 1-D device
-                   mesh via shard_map; probes replicated, row chunks
-                   all-gathered.  The local (L, n) @ (n, k) product
-                   routes through the tiled Pallas matvec kernel
-                   (repro/kernels/matvec.py) on TPU.               [mesh]
-
-Anything with ``.shape``, ``.dtype`` and ``.mm`` quacks as an operator, so
-implicit operators (Kronecker products, sparse stencils, Jacobians) plug in
-without materializing ``A``.
+The ad-hoc backends that lived here grew into the structured operator
+package `repro.estimators.operators` (Kronecker / Toeplitz / stencil
+backends, matrix-free CG, the diag/trace_hint protocol).  Import from
+there; this module re-exports the original names so existing callers keep
+working and will be dropped once downstream code migrates.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
-import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec
-
-from repro._compat import shard_map as _shard_map
+from repro.estimators.operators import (          # noqa: F401
+    BatchedOperator,
+    DenseOperator,
+    LinearOperator,
+    ShardedOperator,
+    as_operator,
+    rowwise_matvec_specs,
+)
 
 __all__ = ["LinearOperator", "DenseOperator", "BatchedOperator",
            "ShardedOperator", "as_operator", "rowwise_matvec_specs"]
-
-
-class LinearOperator:
-    """Minimal protocol: square operator exposing blocked matvec ``mm``."""
-
-    shape: tuple
-    dtype = None
-
-    def mm(self, v: jax.Array) -> jax.Array:
-        """Product with a slab of column vectors: (n, k) -> (n, k)."""
-        raise NotImplementedError
-
-    def mv(self, v: jax.Array) -> jax.Array:
-        """Single matvec (n,) -> (n,)."""
-        return self.mm(v[:, None])[:, 0]
-
-    @property
-    def n(self) -> int:
-        return self.shape[0]
-
-
-class DenseOperator(LinearOperator):
-    """Wraps an in-memory (n, n) matrix."""
-
-    def __init__(self, a: jax.Array):
-        a = jnp.asarray(a)
-        if a.ndim != 2 or a.shape[0] != a.shape[1]:
-            raise ValueError(f"expected square matrix, got {a.shape}")
-        self.a = a
-        self.shape = a.shape
-        self.dtype = a.dtype
-
-    def mm(self, v):
-        return self.a @ v
-
-    def mv(self, v):
-        return self.a @ v
-
-
-class BatchedOperator(LinearOperator):
-    """Wraps a (B, n, n) stack; probes carry a leading batch axis (B, n, k).
-
-    Used by ``logdet_batched``: one estimator invocation drives the whole
-    stack, so XLA sees a single batched GEMM per polynomial/Lanczos step
-    instead of B small ones.
-    """
-
-    def __init__(self, stack: jax.Array):
-        stack = jnp.asarray(stack)
-        if stack.ndim != 3 or stack.shape[1] != stack.shape[2]:
-            raise ValueError(f"expected (B, n, n) stack, got {stack.shape}")
-        self.stack = stack
-        self.shape = stack.shape[1:]
-        self.batch = stack.shape[0]
-        self.dtype = stack.dtype
-
-    def mm(self, v):  # (B, n, k) -> (B, n, k)
-        return jnp.einsum("bij,bjk->bik", self.stack, v)
-
-    def mv(self, v):  # (B, n) -> (B, n)
-        return jnp.einsum("bij,bj->bi", self.stack, v)
-
-
-def rowwise_matvec_specs(axis_name: str):
-    """(in_specs, out_specs) for a row-distributed matvec under shard_map.
-
-    Matrix rows sharded over ``axis_name``, probe slab replicated, result row
-    chunks concatenated back along the row axis.
-    """
-    p = PartitionSpec
-    return (p(axis_name, None), p(None, None)), p(axis_name, None)
-
-
-@functools.lru_cache(maxsize=16)
-def _sharded_mm(mesh, axis_name: str, use_kernel: bool):
-    from repro.kernels import ops as _kops
-
-    def kernel(local, v):            # local (L, n), v (n, k) replicated
-        if use_kernel:
-            return _kops.matvec(local, v)
-        return local @ v
-
-    in_specs, out_specs = rowwise_matvec_specs(axis_name)
-    return jax.jit(_shard_map(kernel, mesh=mesh,
-                              in_specs=in_specs, out_specs=out_specs))
-
-
-class ShardedOperator(LinearOperator):
-    """Row-distributed dense operator over a 1-D mesh.
-
-    Device ``p`` owns the contiguous row block ``[p*L, (p+1)*L)`` — the same
-    layout the parallel condensation core uses, so an operator can be handed
-    from the exact path to the estimator path without a resharding pass.
-    ``n`` must be divisible by the mesh size (pad via
-    ``repro.core.pad_to_multiple``, which leaves the determinant unchanged).
-    """
-
-    def __init__(self, a: jax.Array, mesh, axis_name: str = "rows", *,
-                 use_kernel: bool = True):
-        a = jnp.asarray(a)
-        if a.ndim != 2 or a.shape[0] != a.shape[1]:
-            raise ValueError(f"expected square matrix, got {a.shape}")
-        nproc = int(mesh.shape[axis_name])
-        if a.shape[0] % nproc:
-            raise ValueError(
-                f"N={a.shape[0]} not divisible by mesh size {nproc}; "
-                "pad with repro.core.pad_to_multiple first")
-        self.mesh = mesh
-        self.axis_name = axis_name
-        self.shape = a.shape
-        self.dtype = a.dtype
-        self.a = jax.device_put(
-            a, NamedSharding(mesh, PartitionSpec(axis_name, None)))
-        self._mm = _sharded_mm(mesh, axis_name, use_kernel)
-
-    def mm(self, v):
-        return self._mm(self.a, v.astype(self.dtype))
-
-
-def as_operator(a, *, mesh=None, axis_name: str = "rows",
-                use_kernel: bool = True) -> LinearOperator:
-    """Coerce a matrix / stack / operator to the estimator protocol.
-
-    (n, n) array -> DenseOperator (or ShardedOperator when ``mesh`` given);
-    (B, n, n) array -> BatchedOperator; an existing operator passes through.
-    """
-    if isinstance(a, LinearOperator):
-        return a
-    a = jnp.asarray(a)
-    if a.ndim == 3:
-        return BatchedOperator(a)
-    if mesh is not None and int(mesh.shape[axis_name]) > 1:
-        return ShardedOperator(a, mesh, axis_name, use_kernel=use_kernel)
-    return DenseOperator(a)

@@ -1,0 +1,60 @@
+"""Implicit linear-operator backends for the matrix-free estimators.
+
+Every estimator and solver in `repro.estimators` touches the matrix ONLY
+through the `LinearOperator` protocol (``mm``/``mv``/``diag``/
+``trace_hint`` — see base.py).  Backends by scenario:
+
+  DenseOperator      in-memory (n, n) matrix                       [1 dev]
+  BatchedOperator    (B, n, n) stack, one batched GEMM per step
+  ShardedOperator    row-distributed dense matvec over a 1-D mesh  [mesh]
+  KroneckerOperator  A ⊗ B via reshaped GEMMs — O(n^1.5) memory
+  ToeplitzOperator   constant diagonals via circulant FFT — O(n) memory
+  StencilOperator    banded contraction via Pallas kernel — O(nb*n)
+
+plus `cg_solve` (solve.py): batched preconditioned conjugate gradient on
+any of the above, making linear solves as matrix-free as the logdets.
+
+See README.md in this directory for the selection guide, and
+`as_operator` for the coercion rules arrays follow into the protocol.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.estimators.operators.base import LinearOperator, is_operator
+from repro.estimators.operators.batched import BatchedOperator
+from repro.estimators.operators.dense import DenseOperator
+from repro.estimators.operators.kron import KroneckerOperator
+from repro.estimators.operators.sharded import (
+    ShardedOperator, rowwise_matvec_specs,
+)
+from repro.estimators.operators.stencil import StencilOperator
+from repro.estimators.operators.toeplitz import ToeplitzOperator
+
+__all__ = [
+    "LinearOperator", "DenseOperator", "BatchedOperator", "ShardedOperator",
+    "KroneckerOperator", "ToeplitzOperator", "StencilOperator",
+    "as_operator", "is_operator", "rowwise_matvec_specs",
+    "CGResult", "cg_solve",
+]
+
+
+def as_operator(a, *, mesh=None, axis_name: str = "rows",
+                use_kernel: bool = True) -> LinearOperator:
+    """Coerce a matrix / stack / operator to the estimator protocol.
+
+    (n, n) array -> `DenseOperator` (or `ShardedOperator` when ``mesh`` is
+    given); (B, n, n) array -> `BatchedOperator`; an existing operator —
+    including user-defined duck-typed ones — passes through untouched.
+    """
+    if is_operator(a):
+        return a
+    a = jnp.asarray(a)
+    if a.ndim == 3:
+        return BatchedOperator(a)
+    if mesh is not None and int(mesh.shape[axis_name]) > 1:
+        return ShardedOperator(a, mesh, axis_name, use_kernel=use_kernel)
+    return DenseOperator(a)
+
+
+from repro.estimators.operators.solve import CGResult, cg_solve  # noqa: E402

@@ -1,0 +1,116 @@
+"""Matrix-free conjugate gradient on the `LinearOperator` protocol.
+
+Solves ``A X = B`` for SPD ``A`` touching the operator only through
+``mm`` — one blocked matvec per iteration, batched over a slab of
+right-hand sides ``B (..., n, k)`` exactly the way the estimators batch
+probe columns (and over a leading batch axis for `BatchedOperator`
+stacks).  Iteration count scales with sqrt(cond(A)); Jacobi
+preconditioning from ``op.diag()`` (free for every structured backend)
+divides out diagonal disparity before the Krylov iteration pays for it.
+
+All columns iterate in lockstep inside one ``lax.while_loop`` — the loop
+stops when EVERY column's residual passes ``||r|| <= tol * ||b|| + atol``
+or at ``maxiter``; converged columns take guarded no-op steps (their
+search directions underflow to zero) so there is no per-column control
+flow to break batching.
+
+This is what makes the GMM example's Mahalanobis term sub-cubic: the
+E-step solve goes from one O(n^3) factorization per covariance to
+O(iters) structured matvecs (see examples/gmm_loglik.py --solver cg).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["CGResult", "cg_solve"]
+
+
+class CGResult(NamedTuple):
+    """Solution with convergence evidence."""
+    x: jax.Array          # (..., n, k) solution slab (or (..., n) for mv rhs)
+    iters: jax.Array      # () iterations taken
+    resnorm: jax.Array    # (..., k) final residual 2-norms per column
+    converged: jax.Array  # () all columns under tolerance?
+
+
+def _safe_div(num, den):
+    """num / den with 0/0 -> 0 (converged columns have vanishing den)."""
+    tiny = jnp.finfo(den.dtype).tiny
+    safe = jnp.where(jnp.abs(den) > tiny, den, 1.0)
+    return jnp.where(jnp.abs(den) > tiny, num / safe, jnp.zeros_like(num))
+
+
+def cg_solve(a, b, *, tol: float = 1e-10, atol: float = 0.0,
+             maxiter: Optional[int] = None, precondition: bool = True,
+             x0: Optional[jax.Array] = None) -> CGResult:
+    """Preconditioned conjugate gradient: solve SPD ``a @ x = b``.
+
+    ``a`` is anything `as_operator` accepts — a matrix, a (B, n, n) stack,
+    or any `LinearOperator`.  ``b`` is a slab (..., n, k) or a single
+    vector (..., n) matching the operator's batching.  ``precondition``
+    uses Jacobi scaling from ``op.diag()`` when the backend provides it.
+
+    Returns a `CGResult`; ``converged`` is a traced bool — check it (or
+    ``resnorm``) rather than assuming ``maxiter`` sufficed.
+    """
+    from repro.estimators.operators import as_operator  # lazy: package cycle
+    op = as_operator(a)
+    n = op.shape[-1]
+    if maxiter is None:
+        maxiter = 10 * n
+    b = jnp.asarray(b, op.dtype)
+    batch = getattr(op, "batch", None)
+    vec = b.ndim == (1 if batch is None else 2)
+    b2 = b[..., :, None] if vec else b
+    if b2.shape[-2] != n:
+        raise ValueError(f"rhs rows {b2.shape} do not match operator n={n}")
+
+    d = op.diag() if precondition else None
+    if d is None:
+        def apply_minv(r):
+            return r
+    else:
+        tiny = jnp.finfo(op.dtype).tiny
+        dinv = jnp.where(jnp.abs(d) > tiny, 1.0 / d, 1.0)[..., :, None]
+
+        def apply_minv(r):
+            return dinv * r
+
+    bnorm = jnp.linalg.norm(b2, axis=-2)                     # (..., k)
+    thresh = tol * bnorm + atol
+
+    x = jnp.zeros_like(b2) if x0 is None else jnp.asarray(x0, op.dtype)
+    x = x[..., :, None] if (x0 is not None and vec) else x
+    r = b2 - op.mm(x) if x0 is not None else b2
+    z = apply_minv(r)
+    p = z
+    rz = (r * z).sum(-2)                                     # (..., k)
+
+    def resnorm(r):
+        return jnp.linalg.norm(r, axis=-2)
+
+    def cond(state):
+        _, r, _, _, it = state
+        return (it < maxiter) & jnp.any(resnorm(r) > thresh)
+
+    def body(state):
+        x, r, p, rz, it = state
+        ap = op.mm(p)
+        alpha = _safe_div(rz, (p * ap).sum(-2))[..., None, :]
+        x = x + alpha * p
+        r = r - alpha * ap
+        z = apply_minv(r)
+        rz_new = (r * z).sum(-2)
+        beta = _safe_div(rz_new, rz)[..., None, :]
+        p = z + beta * p
+        return x, r, p, rz_new, it + 1
+
+    x, r, _, _, it = lax.while_loop(
+        cond, body, (x, r, p, rz, jnp.zeros((), jnp.int32)))
+    rn = resnorm(r)
+    out = x[..., :, 0] if vec else x
+    return CGResult(out, it, rn, jnp.all(rn <= thresh))

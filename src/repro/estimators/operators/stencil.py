@@ -1,0 +1,88 @@
+"""Stencil backend: banded matrices as (offset, coefficient-row) pairs.
+
+Discretized differential operators, graph Laplacians on paths/grids, and
+banded precision matrices are defined by a few diagonals:
+
+    A[i, i + offsets[d]] = bands[d, i]          (zero outside the bands)
+
+Storage is O(nb * n) for nb bands; the matvec is a bandwidth-bound
+contraction ``y[i] = sum_d bands[d, i] * x[i + offsets[d]]`` — O(nb * n)
+FLOPs per probe column instead of O(n^2) — routed through the Pallas
+kernel `repro.kernels.stencil_mv` on TPU (jnp reference elsewhere).
+
+Entries whose stencil pokes outside ``[0, n)`` read zero (Dirichlet
+boundary), matching the dense banded materialization in `to_dense`.
+
+For the SPD workloads the estimators assume, use symmetric band tables:
+offset ``-d`` carrying the transpose coefficients of offset ``+d``
+(e.g. the 1-D Laplacian ``offsets=(-1, 0, 1)``,
+``bands=(-1, 2 + eps, -1)``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.estimators.operators.base import LinearOperator
+
+__all__ = ["StencilOperator"]
+
+
+class StencilOperator(LinearOperator):
+    """Implicit banded operator from diagonal offsets + coefficient rows.
+
+    ``offsets`` — tuple of distinct ints in (-n, n), one per band.
+    ``bands`` — (nb, n) per-row coefficients, or (nb,) constants broadcast
+    along each diagonal (requires ``n``).
+    """
+
+    def __init__(self, offsets, bands, n: int = None):
+        offsets = tuple(int(o) for o in offsets)
+        if len(set(offsets)) != len(offsets):
+            raise ValueError(f"duplicate offsets: {offsets}")
+        bands = jnp.asarray(bands)
+        if bands.ndim == 1:
+            if n is None:
+                raise ValueError("constant bands (nb,) require n")
+            bands = jnp.broadcast_to(bands[:, None], (bands.shape[0], n))
+        elif bands.ndim == 2:
+            n = bands.shape[1]
+        else:
+            raise ValueError(f"bands must be (nb,) or (nb, n), "
+                             f"got {bands.shape}")
+        if bands.shape[0] != len(offsets):
+            raise ValueError(f"{len(offsets)} offsets but "
+                             f"{bands.shape[0]} band rows")
+        if any(abs(o) >= n for o in offsets):
+            raise ValueError(f"offsets {offsets} out of range for n={n}")
+        self.offsets = offsets
+        self.bands = bands
+        self.shape = (n, n)
+        self.dtype = bands.dtype
+
+    def mm(self, v):  # (n, k) -> (n, k)
+        from repro.kernels import ops as _kops
+        if v.ndim != 2 or v.shape[0] != self.n:
+            raise ValueError(f"expected ({self.n}, k) slab, got {v.shape}")
+        return _kops.stencil_mv(self.bands, v.astype(self.dtype),
+                                offsets=self.offsets)
+
+    def mv(self, v):
+        from repro.kernels import ops as _kops
+        return _kops.stencil_mv(self.bands, v.astype(self.dtype),
+                                offsets=self.offsets)
+
+    def diag(self):
+        if 0 in self.offsets:
+            return self.bands[self.offsets.index(0)]
+        return jnp.zeros((self.n,), self.dtype)
+
+    def to_dense(self):
+        n = self.n
+        a = jnp.zeros((n, n), self.dtype)
+        for d, off in enumerate(self.offsets):
+            if off >= 0:
+                a = a + jnp.diag(self.bands[d, :n - off], off)
+            else:
+                a = a + jnp.diag(self.bands[d, -off:], off)
+        return a

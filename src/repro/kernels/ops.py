@@ -16,9 +16,10 @@ from repro.kernels.condense_step import rank1_update_pallas
 from repro.kernels.matvec import matvec_pallas
 from repro.kernels.panel_factor import panel_factor_pallas
 from repro.kernels.panel_update import panel_update_pallas
+from repro.kernels.stencil_mv import stencil_mv_pallas
 
 __all__ = ["rank1_update", "panel_update", "panel_factor_vmem", "matvec",
-           "on_tpu"]
+           "stencil_mv", "on_tpu"]
 
 
 @functools.lru_cache(maxsize=1)
@@ -47,6 +48,19 @@ def matvec(a: jax.Array, x: jax.Array, **kw) -> jax.Array:
     if on_tpu():
         return matvec_pallas(a, x, **kw)
     return _ref.matvec_ref(a, x)
+
+
+def stencil_mv(bands: jax.Array, x: jax.Array, *, offsets: tuple,
+               **kw) -> jax.Array:
+    """Banded stencil matvec; Pallas on TPU, jnp reference elsewhere.
+
+    Like `matvec`, the estimators drive this thousands of times — on non-TPU
+    backends fall through to the XLA-fused reference rather than the Python
+    interpreter.
+    """
+    if on_tpu():
+        return stencil_mv_pallas(bands, x, offsets=offsets, **kw)
+    return _ref.stencil_mv_ref(bands, x, offsets=offsets)
 
 
 def panel_factor_vmem(panel: jax.Array, m0, r_pos=0):

@@ -4,7 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["rank1_update_ref", "panel_update_ref", "matvec_ref"]
+__all__ = ["rank1_update_ref", "panel_update_ref", "matvec_ref",
+           "stencil_mv_ref"]
 
 
 def rank1_update_ref(a: jax.Array, pc: jax.Array, pr: jax.Array) -> jax.Array:
@@ -20,3 +21,19 @@ def panel_update_ref(a: jax.Array, c: jax.Array, r: jax.Array) -> jax.Array:
 def matvec_ref(a: jax.Array, x: jax.Array) -> jax.Array:
     """a (M, N) @ x (N,) or (N, K)."""
     return a @ x.astype(a.dtype)
+
+
+def stencil_mv_ref(bands: jax.Array, x: jax.Array, *,
+                   offsets: tuple) -> jax.Array:
+    """y[i] = sum_d bands[d, i] * x[i + offsets[d]], zero outside [0, n)."""
+    vec = x.ndim == 1
+    x2 = (x[:, None] if vec else x).astype(bands.dtype)
+    n = x2.shape[0]
+    lo = min(min(offsets), 0)
+    hi = max(max(offsets), 0)
+    xp = jnp.pad(x2, ((-lo, hi), (0, 0)))
+    y = jnp.zeros_like(x2)
+    for d, off in enumerate(offsets):
+        start = off - lo
+        y = y + bands[d][:, None] * xp[start:start + n]
+    return y[:, 0] if vec else y

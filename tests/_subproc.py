@@ -22,10 +22,13 @@ def run_with_devices(code: str, n_devices: int, *, timeout: int = 600) -> str:
     Returns stdout; raises on nonzero exit with stderr attached.
     """
     env = dict(os.environ)
-    env["XLA_FLAGS"] = (
-        f"--xla_force_host_platform_device_count={n_devices} "
-        + env.get("XLA_FLAGS", "")
-    )
+    # replace (not prepend to) any inherited device-count flag — e.g. the CI
+    # multi-device job exports one for in-process tests; duplicating the
+    # flag is undefined behaviour in XLA's parser
+    inherited = [f for f in env.get("XLA_FLAGS", "").split()
+                 if not f.startswith("--xla_force_host_platform_device_count")]
+    env["XLA_FLAGS"] = " ".join(
+        [f"--xla_force_host_platform_device_count={n_devices}"] + inherited)
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
     proc = subprocess.run(
         [sys.executable, "-c", PRELUDE + code],
