@@ -1,9 +1,11 @@
 """Benchmark-regression gate: fresh estimator bench vs committed baseline.
 
-CI runs ``benchmarks.estimators_bench --sizes 256,512`` and then this
-check, which compares ``bench_out/estimators.json`` against the committed
-``bench_out/estimators_baseline.json`` record-by-record (keyed on
-(n, method, operator)) and FAILS on
+CI runs ``benchmarks.estimators_bench --sizes 256,512 --grad`` and then
+this check, which compares ``bench_out/estimators.json`` against the
+committed ``bench_out/estimators_baseline.json`` record-by-record (keyed
+on (n, method, operator, pass) — ``pass`` distinguishes forward-only from
+forward+backward rows, so backward-pass regressions are gated exactly
+like forward ones) and FAILS on
 
   time    > 2x baseline * speed + 0.25 s slack
   rel_err > 3x baseline + 1e-8 floor     (floor keeps exact methods from
@@ -24,7 +26,7 @@ shrink deliberately); a fresh run missing EVERY gated record fails.
 Refresh the baseline after a legitimate perf/accuracy change:
 
     PYTHONPATH=src python -m benchmarks.estimators_bench \
-        --sizes 256,512 --operator all --iters 3
+        --sizes 256,512 --operator all --iters 3 --grad
     cp bench_out/estimators.json bench_out/estimators_baseline.json
 """
 from __future__ import annotations
@@ -55,7 +57,8 @@ def speed_ratio(baseline: dict, fresh: dict) -> float:
 
 
 def key(rec):
-    return (rec["n"], rec["method"], rec.get("operator", "dense"))
+    return (rec["n"], rec["method"], rec.get("operator", "dense"),
+            rec.get("pass", "fwd"))
 
 
 def main(argv=None):
@@ -97,7 +100,7 @@ def main(argv=None):
             failures.append(
                 f"{k}: rel_err {got['rel_err']:.3e} > limit {e_lim:.3e} "
                 f"(baseline {base['rel_err']:.3e})")
-        print(f"{str(k):48s} t={got['seconds']:.3f}s/{t_lim:.3f}s "
+        print(f"{str(k):56s} t={got['seconds']:.3f}s/{t_lim:.3f}s "
               f"err={got['rel_err']:.2e}/{e_lim:.2e}  "
               f"{', '.join(flags) or 'ok'}")
 

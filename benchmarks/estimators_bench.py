@@ -16,18 +16,27 @@ Exact condensation methods need a materialized matrix, so structured runs
 cover the estimator methods only (others are skipped with a note).
 Results go to bench_out/estimators.json as a list of records
 
-    {"n": ..., "method": ..., "operator": ..., "seconds": ...,
-     "logdet": ..., "rel_err": ..., "sem": ...}
+    {"n": ..., "method": ..., "operator": ..., "pass": "fwd"|"grad",
+     "seconds": ..., "logdet": ..., "rel_err": ..., "sem": ...}
 
 plus a CSV twin for the roofline tooling.  Defaults stay CPU-friendly
 (N up to 2048); --full sweeps the paper-scale range N in {512..8192} where
 the O(N^3)-vs-O(N^2 * probes) crossover is unmistakable.
+
+``--grad`` adds a forward+backward axis: each method is re-timed as
+``jit(value_and_grad(logdet))`` — exact methods pay one dense inverse in
+the backward pass, estimator methods one batched CG solve on the forward's
+probes, and structured operators differentiate with respect to their own
+parameters (Kronecker factors / Toeplitz symbol / stencil bands).  The
+``pass`` field keys the regression gate (benchmarks/check_regression.py)
+so backward-pass time is gated exactly like forward.
 
     PYTHONPATH=src python -m benchmarks.estimators_bench
     PYTHONPATH=src python -m benchmarks.estimators_bench --operator kron \
         --methods chebyshev,slq
     PYTHONPATH=src python -m benchmarks.estimators_bench --full \
         --methods mc_staged,chebyshev,slq
+    PYTHONPATH=src python -m benchmarks.estimators_bench --grad
 """
 from __future__ import annotations
 
@@ -86,6 +95,33 @@ def make_operator(structure: str, n: int, seed: int):
                      f"choose from {OPERATORS}")
 
 
+def grad_target(structure, a, method, kw):
+    """(scalar_fn, params) for jax.value_and_grad on this structure.
+
+    Dense inputs differentiate with respect to the matrix entries;
+    structured operators with respect to their own parameters, rebuilt
+    inside the traced function so the structured pullback engages.
+    """
+    from repro.core import slogdet
+    from repro.estimators import (
+        KroneckerOperator, StencilOperator, ToeplitzOperator,
+    )
+
+    if structure == "dense":
+        return (lambda p: slogdet(p, method=method, **kw)[1]), a
+    if structure == "kron":
+        return (lambda p: slogdet(KroneckerOperator(p[0], p[1]),
+                                  method=method, **kw)[1]), (a.a, a.b)
+    if structure == "toeplitz":
+        return (lambda p: slogdet(ToeplitzOperator(p),
+                                  method=method, **kw)[1]), a.c
+    if structure == "stencil":
+        offsets = a.offsets
+        return (lambda p: slogdet(StencilOperator(offsets, p),
+                                  method=method, **kw)[1]), a.bands
+    raise ValueError(structure)
+
+
 def main(argv=None):
     import jax
     jax.config.update("jax_enable_x64", True)
@@ -107,6 +143,9 @@ def main(argv=None):
     ap.add_argument("--num-steps", type=int, default=25)
     ap.add_argument("--iters", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--grad", action="store_true",
+                    help="also time forward+backward via "
+                         "jit(value_and_grad(logdet)) per method")
     args = ap.parse_args(argv)
 
     if args.sizes:
@@ -141,7 +180,7 @@ def main(argv=None):
 
                 t = timeit(run, a, warmup=1, iters=args.iters)
                 rec = {"n": n_actual, "method": method,
-                       "operator": structure, "seconds": t,
+                       "operator": structure, "pass": "fwd", "seconds": t,
                        "logdet_ref": ld_ref}
                 if method in EXACT:
                     _, ld = run(a)
@@ -154,16 +193,37 @@ def main(argv=None):
                 rec["logdet"] = float(ld)
                 rec["rel_err"] = abs(float(ld) - ld_ref) / abs(ld_ref)
                 records.append(rec)
-                print(f"n={n_actual:5d} {structure:>8s} {method:>10s}: "
-                      f"{t*1e3:9.1f} ms  rel_err={rec['rel_err']:.2e}")
+                print(f"n={n_actual:5d} {structure:>8s} {method:>10s} "
+                      f" fwd: {t*1e3:9.1f} ms  rel_err={rec['rel_err']:.2e}")
+
+                if not args.grad:
+                    continue
+                fn, params = grad_target(structure, a, method, kw)
+                vg = jax.jit(jax.value_and_grad(fn))
+                tg = timeit(vg, params, warmup=1, iters=args.iters)
+                val, _ = vg(params)
+                grec = {"n": n_actual, "method": method,
+                        "operator": structure, "pass": "grad",
+                        "seconds": tg, "logdet_ref": ld_ref,
+                        "logdet": float(val),
+                        "rel_err": abs(float(val) - ld_ref) / abs(ld_ref)}
+                records.append(grec)
+                # NOTE: grad rows are jit(value_and_grad) end to end, while
+                # fwd rows time the public eager call — grad can come out
+                # FASTER at small N where eager dispatch dominates; compare
+                # grad rows against grad rows (the gate keys on `pass`).
+                print(f"n={n_actual:5d} {structure:>8s} {method:>10s} "
+                      f"grad: {tg*1e3:9.1f} ms  rel_err={grec['rel_err']:.2e}")
 
     OUT_DIR.mkdir(exist_ok=True)
     out = OUT_DIR / "estimators.json"
     out.write_text(json.dumps(records, indent=2))
     write_csv("estimators.csv",
-              ["n", "method", "operator", "seconds", "logdet", "rel_err"],
-              [[r["n"], r["method"], r["operator"], f"{r['seconds']:.6f}",
-                f"{r['logdet']:.6f}", f"{r['rel_err']:.3e}"]
+              ["n", "method", "operator", "pass", "seconds", "logdet",
+               "rel_err"],
+              [[r["n"], r["method"], r["operator"], r["pass"],
+                f"{r['seconds']:.6f}", f"{r['logdet']:.6f}",
+                f"{r['rel_err']:.3e}"]
                for r in records])
     print(f"estimators -> {out}")
     return records

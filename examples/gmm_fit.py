@@ -1,0 +1,214 @@
+"""Gradient-trained Gaussian mixture — the paper's motivating workload,
+EM-free.
+
+Where examples/gmm_loglik.py runs classic EM (closed-form M-step), this
+example *trains* the mixture by SGD on the negative log-likelihood
+
+    NLL = -mean_x log sum_k softmax(w)_k N(x | mu_k, Sigma_k)
+
+with ``Sigma_k = L_k L_k^T`` parameterized by its Cholesky factor (lower
+triangle free, diagonal softplus-positive), so every step needs
+``d NLL / d Sigma`` — which flows through ``repro.core.logdet_batched``'s
+custom VJP (repro/estimators/grad.py).  With an estimator method the
+whole logdet gradient stays matrix-free: the backward pass is one batched
+CG solve on the forward's probe slab, vmapped over the K covariances; with
+``--method mc`` it is the exact condensation forward and the analytic
+``A^{-T}`` backward.  The Mahalanobis term uses the triangular factor
+directly (two O(d^2) solves — differentiable, no dense inverse).
+
+The Cholesky parameterization also gives a free exact reference
+``logdet(Sigma_k) = 2 sum_i log L_k[i, i]``, logged as the estimator
+fidelity monitor (`ld_gap`).
+
+    PYTHONPATH=src python examples/gmm_fit.py --dim 32 --components 3
+    PYTHONPATH=src python examples/gmm_fit.py --method slq --steps 200
+    PYTHONPATH=src python examples/gmm_fit.py --method mc   # exact VJP
+"""
+import argparse
+
+import numpy as np
+
+import jax
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+
+try:
+    import optax
+except ImportError:                      # keep the example/test runnable
+    optax = None
+
+from repro.core import logdet_batched
+
+
+# ---------------------------------------------------------------- fallback
+
+class _SGD:
+    """Minimal optax.sgd stand-in for environments without optax."""
+
+    def __init__(self, lr):
+        self.lr = lr
+
+    def init(self, params):
+        return None
+
+    def update(self, grads, state, params=None):
+        return jax.tree_util.tree_map(lambda g: -self.lr * g, grads), state
+
+
+def _apply_updates(params, updates):
+    if optax is not None:
+        return optax.apply_updates(params, updates)
+    return jax.tree_util.tree_map(lambda p, u: p + u, params, updates)
+
+
+def _make_optimizer(lr):
+    if optax is not None:
+        return optax.sgd(lr, momentum=0.9)
+    return _SGD(lr)
+
+
+# ------------------------------------------------------------------- model
+
+def make_data(rng, dim, components, samples):
+    """Well-separated synthetic mixture with anisotropic covariances."""
+    mu = rng.standard_normal((components, dim)) * 3.0
+    chunks = []
+    for j in range(components):
+        m = np.eye(dim) + 0.2 * rng.standard_normal((dim, dim))
+        chunks.append(mu[j] + rng.standard_normal(
+            (samples // components, dim)) @ m)
+    return np.concatenate(chunks), mu
+
+
+def init_params(rng, dim, components, x):
+    """Means at random data points, near-unit Cholesky factors."""
+    idx = rng.choice(x.shape[0], size=components, replace=False)
+    return {
+        "mu": jnp.asarray(x[idx] + 0.1 * rng.standard_normal(
+            (components, dim))),
+        "logit_w": jnp.zeros((components,)),
+        # softplus(0.55) ~ 1.0: identity-ish initial covariances
+        "chol_diag_raw": jnp.full((components, dim), 0.55),
+        "chol_low": jnp.zeros((components, dim, dim)),
+    }
+
+
+def cholesky_factors(params):
+    """(K, d, d) lower-triangular factors with positive diagonal."""
+    low = jnp.tril(params["chol_low"], -1)
+    diag = jax.nn.softplus(params["chol_diag_raw"]) + 1e-3
+    return low + jnp.einsum("kd,de->kde", diag, jnp.eye(diag.shape[-1]))
+
+
+def nll(params, x, key, *, method, num_probes, degree, num_steps):
+    """Mixture NLL; the logdet term rides the batched custom VJP."""
+    chol = cholesky_factors(params)                     # (K, d, d)
+    sigma = jnp.einsum("kij,klj->kil", chol, chol)      # L L^T, SPD stack
+    d = x.shape[1]
+
+    if method == "mc":
+        ld = logdet_batched(sigma, method="mc")
+    else:
+        kw = dict(num_probes=num_probes, key=key)
+        if method == "chebyshev":
+            kw["degree"] = degree
+        else:
+            kw["num_steps"] = num_steps
+        ld = logdet_batched(sigma, method=method, **kw)
+
+    # Mahalanobis through the factor: ||L^{-1}(x - mu)||^2, O(d^2)/sample
+    xc = x[None, :, :] - params["mu"][:, None, :]       # (K, n, d)
+    y = jax.vmap(lambda l, v: jax.scipy.linalg.solve_triangular(
+        l, v.T, lower=True))(chol, xc)                  # (K, d, n)
+    quad = (y ** 2).sum(1)                              # (K, n)
+
+    logp = (jax.nn.log_softmax(params["logit_w"])[:, None]
+            - 0.5 * (d * jnp.log(2 * jnp.pi) + ld[:, None] + quad))
+    return -jax.nn.logsumexp(logp, axis=0).mean()
+
+
+# ---------------------------------------------------------------- training
+
+def train(*, dim=32, components=3, samples=600, steps=100, method="chebyshev",
+          num_probes=16, degree=32, num_steps=15, lr=0.05, seed=0,
+          log_every=10):
+    """SGD on the mixture NLL; returns the training history.
+
+    ``history["nll"]`` is the per-step loss (with estimator methods the
+    logdet term is stochastic — fresh probes each step via key folding);
+    ``history["ld_gap"]`` tracks |estimated - exact| logdet averaged over
+    components, the estimator-fidelity monitor.
+    """
+    rng = np.random.default_rng(seed)
+    data, _ = make_data(rng, dim, components, samples)
+    x = jnp.asarray(data)
+    params = init_params(rng, dim, components, x)
+
+    loss_fn = lambda p, k: nll(p, x, k, method=method, num_probes=num_probes,
+                               degree=degree, num_steps=num_steps)
+    value_and_grad = jax.jit(jax.value_and_grad(loss_fn))
+    opt = _make_optimizer(lr)
+    opt_state = opt.init(params)
+    base_key = jax.random.PRNGKey(seed)
+
+    @jax.jit
+    def ld_gap(p, k):
+        chol = cholesky_factors(p)
+        exact = 2.0 * jnp.log(jnp.diagonal(chol, axis1=-2, axis2=-1)).sum(-1)
+        if method == "mc":
+            return jnp.zeros(())
+        sigma = jnp.einsum("kij,klj->kil", chol, chol)
+        kw = dict(num_probes=num_probes, key=k)
+        kw["degree" if method == "chebyshev" else "num_steps"] = (
+            degree if method == "chebyshev" else num_steps)
+        est = logdet_batched(sigma, method=method, **kw)
+        return jnp.abs(est - exact).mean()
+
+    history = {"nll": [], "ld_gap": []}
+    for step in range(steps):
+        key = jax.random.fold_in(base_key, step)
+        val, grads = value_and_grad(params, key)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = _apply_updates(params, updates)
+        history["nll"].append(float(val))
+        history["ld_gap"].append(float(ld_gap(params, key)))
+        if log_every and step % log_every == 0:
+            print(f"step {step:4d}  nll/sample = {float(val):.4f}  "
+                  f"logdet |est-exact| = {history['ld_gap'][-1]:.3e}")
+    history["nll"] = np.asarray(history["nll"])
+    history["ld_gap"] = np.asarray(history["ld_gap"])
+    history["params"] = params
+    return history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dim", type=int, default=32)
+    ap.add_argument("--components", type=int, default=3)
+    ap.add_argument("--samples", type=int, default=600)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--method", choices=("chebyshev", "slq", "mc"),
+                    default="chebyshev",
+                    help="logdet path: stochastic estimators (matrix-free "
+                         "CG backward) or exact condensation (A^-T backward)")
+    ap.add_argument("--num-probes", type=int, default=16)
+    ap.add_argument("--degree", type=int, default=32)
+    ap.add_argument("--num-steps", type=int, default=15)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if optax is None:
+        print("[gmm_fit] optax not installed — using the built-in SGD")
+    hist = train(dim=args.dim, components=args.components,
+                 samples=args.samples, steps=args.steps, method=args.method,
+                 num_probes=args.num_probes, degree=args.degree,
+                 num_steps=args.num_steps, lr=args.lr, seed=args.seed)
+    print(f"\nNLL: {hist['nll'][0]:.4f} -> {hist['nll'][-1]:.4f} "
+          f"({args.steps} steps, method={args.method})")
+    assert hist["nll"][-1] < hist["nll"][0], "training failed to reduce NLL"
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,11 @@ showed wins for huge SPD, implicit, and batched operators:
                stack, mesh-sharded rows, Kronecker, Toeplitz, stencil —
                and matrix-free conjugate gradient (`cg_solve`) on any of
                them (see operators/README.md)
+  grad         custom VJP rules: `estimate_logdet` is differentiable (the
+               backward pass reuses the forward's probes through one
+               matrix-free CG solve; structured operators get structured
+               cotangents), `exact_slogdet_vjp` wraps the exact O(N^3)
+               paths with the analytic A^{-T} pullback
 
 User-facing entry points: ``repro.core.slogdet(a, method="chebyshev"|"slq")``
 for a single matrix or operator and `logdet_batched` for stacks (GMM
@@ -35,6 +40,10 @@ from repro.estimators.operators import (
     as_operator, cg_solve, is_operator, rowwise_matvec_specs,
 )
 from repro.estimators.slq import lanczos, logdet_slq
+from repro.estimators.grad import (
+    ESTIMATOR_METHODS, estimate_logdet, exact_slogdet_vjp,
+    operator_grad_info, register_operator_grad,
+)
 
 __all__ = [
     "TraceEstimate", "hutchinson_trace", "make_probes", "mean_sem",
@@ -45,20 +54,8 @@ __all__ = [
     "as_operator", "is_operator", "rowwise_matvec_specs",
     "CGResult", "cg_solve",
     "ESTIMATOR_METHODS", "estimate_logdet", "logdet_batched",
+    "exact_slogdet_vjp", "register_operator_grad", "operator_grad_info",
 ]
-
-ESTIMATOR_METHODS = ("chebyshev", "slq")
-
-_ESTIMATORS = {"chebyshev": logdet_chebyshev, "slq": logdet_slq}
-
-
-def estimate_logdet(a, method: str = "chebyshev", **kw) -> TraceEstimate:
-    """Dispatch to a logdet estimator by name; see `logdet_chebyshev`,
-    `logdet_slq` for the method-specific keywords."""
-    if method not in _ESTIMATORS:
-        raise ValueError(
-            f"unknown estimator {method!r}; choose from {ESTIMATOR_METHODS}")
-    return _ESTIMATORS[method](a, **kw)
 
 
 def logdet_batched(stack, *, method: str = "chebyshev", **kw):
@@ -92,5 +89,7 @@ def logdet_batched(stack, *, method: str = "chebyshev", **kw):
         from repro.core.condense import slogdet_condense
         if kw:
             raise TypeError(f"method 'mc' takes no estimator keywords: {kw}")
-        return jax.vmap(lambda a: slogdet_condense(a)[1])(stack)
+        # exact VJP per matrix (bar_A = g * A^{-T}), vmapped over the stack
+        f = exact_slogdet_vjp(slogdet_condense)
+        return jax.vmap(lambda a: f(a)[1])(stack)
     return estimate_logdet(stack, method=method, **kw).est

@@ -81,7 +81,7 @@ def chebyshev_coeffs_log(lmin, lmax, degree: int, dtype):
 
 def logdet_chebyshev(a, *, degree: int = 64, num_probes: int = 32,
                      key=None, seed: int = 0, lmin=None, lmax=None,
-                     probe_kind: str = "rademacher",
+                     probe_kind: str = "rademacher", probes=None,
                      mesh=None, axis_name: str = "rows") -> TraceEstimate:
     """Estimate ``log|det(A)|`` of an SPD matrix/operator/stack.
 
@@ -89,6 +89,13 @@ def logdet_chebyshev(a, *, degree: int = 64, num_probes: int = 32,
     ``a`` is a (B, n, n) stack), ``sem`` its Monte-Carlo standard error
     (which does NOT include the deterministic truncation bias; see module
     docstring for the degree trade-off).
+
+    ``probes`` supplies a pre-drawn (..., n, k) slab instead of sampling
+    ``num_probes`` internally — the grad machinery (`estimators.grad`) uses
+    it to share one probe set between the forward estimate and the
+    backward Hutchinson pullback.  The key is still split identically, so
+    a call with ``probes`` drawn from the second half reproduces the
+    internally-sampled value bit for bit.
     """
     if degree < 1:
         raise ValueError(f"degree must be >= 1, got {degree}")
@@ -114,8 +121,14 @@ def logdet_chebyshev(a, *, degree: int = 64, num_probes: int = 32,
     def mv_b(v):                       # spectrum-normalized operator B
         return (2.0 * op.mm(v) - center * v) / width
 
-    v = make_probes(kp, n, num_probes, kind=probe_kind, dtype=dtype,
-                    batch_shape=(batch,) if batch else ())
+    if probes is None:
+        v = make_probes(kp, n, num_probes, kind=probe_kind, dtype=dtype,
+                        batch_shape=(batch,) if batch else ())
+    else:
+        v = jnp.asarray(probes, dtype)
+        if v.shape[-2] != n:
+            raise ValueError(
+                f"probes rows {v.shape} do not match operator n={n}")
     w_prev, w = v, mv_b(v)
     samples = (c[..., 0, None] * (v * v).sum(-2)
                + c[..., 1, None] * (v * w).sum(-2))       # (..., k)

@@ -13,6 +13,10 @@ methods:
   trace_hint()  exact trace when the structure makes it free (Kronecker:
                 tr(A)tr(B); Toeplitz: n*c0), else ``None`` — estimators can
                 use it as a control variate instead of spending probes.
+  rmm(v)/rmv(v) transposed matvec A^T v; defaults assume symmetry (the SPD
+                estimator context), non-symmetric-capable backends override.
+                Powers `cg_solve(..., transpose=True)` and the logdet
+                gradient pullback (`repro.estimators.grad`).
 
 Anything with ``.shape``, ``.dtype`` and ``.mm`` quacks as an operator, so
 user-defined implicit operators (data covariances, Jacobians, graph
@@ -46,6 +50,21 @@ class LinearOperator:
     def mv(self, v: jax.Array) -> jax.Array:
         """Single matvec (..., n) -> (..., n)."""
         return self.mm(v[..., :, None])[..., :, 0]
+
+    def rmm(self, v: jax.Array) -> jax.Array:
+        """Transposed blocked matvec ``A^T v``: (..., n, k) -> (..., n, k).
+
+        Default delegates to ``mm`` — correct for the symmetric (SPD)
+        operators the estimators assume; backends that can represent
+        non-symmetric matrices override it.  This is the hook
+        `solve.cg_solve(..., transpose=True)` and the logdet-gradient
+        pullback (`estimators.grad`) use to apply ``A^{-T}`` safely.
+        """
+        return self.mm(v)
+
+    def rmv(self, v: jax.Array) -> jax.Array:
+        """Single transposed matvec ``A^T v``: (..., n) -> (..., n)."""
+        return self.rmm(v[..., :, None])[..., :, 0]
 
     def diag(self) -> Optional[jax.Array]:
         """Operator diagonal (..., n) when cheap, else None (unknown)."""

@@ -33,6 +33,12 @@ class BatchedOperator(LinearOperator):
     def mv(self, v):  # (B, n) -> (B, n)
         return jnp.einsum("bij,bj->bi", self.stack, v)
 
+    def rmm(self, v):  # (B, n, k) -> (B, n, k): per-matrix A_b^T v_b
+        return jnp.einsum("bji,bjk->bik", self.stack, v)
+
+    def rmv(self, v):  # (B, n) -> (B, n)
+        return jnp.einsum("bji,bj->bi", self.stack, v)
+
     def diag(self):  # (B, n)
         return jnp.diagonal(self.stack, axis1=-2, axis2=-1)
 

@@ -31,6 +31,12 @@ class DenseOperator(LinearOperator):
     def mv(self, v):
         return self.a @ v
 
+    def rmm(self, v):
+        return self.a.T @ v
+
+    def rmv(self, v):
+        return self.a.T @ v
+
     def diag(self):
         return jnp.diagonal(self.a)
 

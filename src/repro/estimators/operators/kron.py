@@ -53,6 +53,15 @@ class KroneckerOperator(LinearOperator):
         y = jnp.einsum("cb,ibk->ick", self.b, t)      # B over the right factor
         return y.reshape(self.n, k)
 
+    def rmm(self, v):  # (n, k) -> (n, k): (A ⊗ B)^T = A^T ⊗ B^T
+        if v.ndim != 2 or v.shape[0] != self.n:
+            raise ValueError(f"expected ({self.n}, k) slab, got {v.shape}")
+        k = v.shape[1]
+        x = v.reshape(self.na, self.nb, k)
+        t = jnp.einsum("ji,jbk->ibk", self.a, x)      # A^T over the left
+        y = jnp.einsum("bc,ibk->ick", self.b, t)      # B^T over the right
+        return y.reshape(self.n, k)
+
     def diag(self):
         d = self.a.diagonal()[:, None] * self.b.diagonal()[None, :]
         return d.reshape(self.n)

@@ -64,6 +64,7 @@ class ShardedOperator(LinearOperator):
                 "pad with repro.core.pad_to_multiple first")
         self.mesh = mesh
         self.axis_name = axis_name
+        self.use_kernel = use_kernel
         self.shape = a.shape
         self.dtype = a.dtype
         self.a = jax.device_put(
@@ -72,6 +73,13 @@ class ShardedOperator(LinearOperator):
 
     def mm(self, v):
         return self._mm(self.a, v.astype(self.dtype))
+
+    def rmm(self, v):
+        # transposed matvec as (v^T A)^T on the row-sharded buffer — the
+        # contraction over the sharded row axis lowers to a psum under
+        # XLA's sharding propagation, no explicit shard_map needed
+        vt = jnp.swapaxes(v.astype(self.dtype), -1, -2)
+        return jnp.swapaxes(vt @ self.a, -1, -2)
 
     def diag(self):
         # gathers one element per row — cheap relative to any matvec

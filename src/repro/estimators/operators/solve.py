@@ -46,19 +46,31 @@ def _safe_div(num, den):
 
 def cg_solve(a, b, *, tol: float = 1e-10, atol: float = 0.0,
              maxiter: Optional[int] = None, precondition: bool = True,
-             x0: Optional[jax.Array] = None) -> CGResult:
+             x0: Optional[jax.Array] = None,
+             transpose: bool = False) -> CGResult:
     """Preconditioned conjugate gradient: solve SPD ``a @ x = b``.
 
     ``a`` is anything `as_operator` accepts — a matrix, a (B, n, n) stack,
     or any `LinearOperator`.  ``b`` is a slab (..., n, k) or a single
     vector (..., n) matching the operator's batching.  ``precondition``
     uses Jacobi scaling from ``op.diag()`` when the backend provides it.
+    ``transpose=True`` solves ``a^T x = b`` through the operator's ``rmm``
+    hook — a no-op for symmetric operators but what makes the logdet
+    gradient pullback (`repro.estimators.grad`) safe on backends that can
+    represent non-symmetric matrices (CG itself still assumes the applied
+    operator is SPD).
+
+    Zero right-hand-side columns are recognized up front: their unique SPD
+    solution is ``x = 0``, returned without spending iterations (and
+    overriding any ``x0`` guess), so an all-zero ``b`` exits immediately
+    instead of grinding through ``maxiter`` guarded 0/0 no-op steps.
 
     Returns a `CGResult`; ``converged`` is a traced bool — check it (or
     ``resnorm``) rather than assuming ``maxiter`` sufficed.
     """
     from repro.estimators.operators import as_operator  # lazy: package cycle
     op = as_operator(a)
+    mm = op.rmm if transpose else op.mm
     n = op.shape[-1]
     if maxiter is None:
         maxiter = 10 * n
@@ -81,11 +93,12 @@ def cg_solve(a, b, *, tol: float = 1e-10, atol: float = 0.0,
             return dinv * r
 
     bnorm = jnp.linalg.norm(b2, axis=-2)                     # (..., k)
+    zero_rhs = bnorm == 0                                    # x = 0 exactly
     thresh = tol * bnorm + atol
 
     x = jnp.zeros_like(b2) if x0 is None else jnp.asarray(x0, op.dtype)
     x = x[..., :, None] if (x0 is not None and vec) else x
-    r = b2 - op.mm(x) if x0 is not None else b2
+    r = b2 - mm(x) if x0 is not None else b2
     z = apply_minv(r)
     p = z
     rz = (r * z).sum(-2)                                     # (..., k)
@@ -95,11 +108,12 @@ def cg_solve(a, b, *, tol: float = 1e-10, atol: float = 0.0,
 
     def cond(state):
         _, r, _, _, it = state
-        return (it < maxiter) & jnp.any(resnorm(r) > thresh)
+        live = (resnorm(r) > thresh) & ~zero_rhs
+        return (it < maxiter) & jnp.any(live)
 
     def body(state):
         x, r, p, rz, it = state
-        ap = op.mm(p)
+        ap = mm(p)
         alpha = _safe_div(rz, (p * ap).sum(-2))[..., None, :]
         x = x + alpha * p
         r = r - alpha * ap
@@ -111,6 +125,7 @@ def cg_solve(a, b, *, tol: float = 1e-10, atol: float = 0.0,
 
     x, r, _, _, it = lax.while_loop(
         cond, body, (x, r, p, rz, jnp.zeros((), jnp.int32)))
-    rn = resnorm(r)
+    x = jnp.where(zero_rhs[..., None, :], jnp.zeros_like(x), x)
+    rn = jnp.where(zero_rhs, jnp.zeros_like(bnorm), resnorm(r))
     out = x[..., :, 0] if vec else x
-    return CGResult(out, it, rn, jnp.all(rn <= thresh))
+    return CGResult(out, it, rn, jnp.all((rn <= thresh) | zero_rhs))

@@ -28,6 +28,22 @@ from repro.estimators.operators.base import LinearOperator
 __all__ = ["StencilOperator"]
 
 
+def _transpose_bands(bands: jax.Array, offsets) -> jax.Array:
+    """Band table of ``A^T``: row ``d`` holds ``bands[d]`` shifted by its
+    offset (entries whose source row falls outside ``[0, n)`` address
+    columns outside the matrix and are zeroed)."""
+    n = bands.shape[1]
+    rows = []
+    for d, o in enumerate(offsets):
+        b = bands[d]
+        if o > 0:
+            b = jnp.concatenate([jnp.zeros((o,), bands.dtype), b[:n - o]])
+        elif o < 0:
+            b = jnp.concatenate([b[-o:], jnp.zeros((-o,), bands.dtype)])
+        rows.append(b)
+    return jnp.stack(rows)
+
+
 class StencilOperator(LinearOperator):
     """Implicit banded operator from diagonal offsets + coefficient rows.
 
@@ -59,6 +75,11 @@ class StencilOperator(LinearOperator):
         self.bands = bands
         self.shape = (n, n)
         self.dtype = bands.dtype
+        # transposed band table: A^T has offset -o carrying bands[d]
+        # shifted so that A^T[i, i-o] = A[i-o, i] = bands[d, i-o];
+        # the shifted table itself is built lazily on first rmm use
+        self._offsets_t = tuple(-o for o in offsets)
+        self._bands_t = None
 
     def mm(self, v):  # (n, k) -> (n, k)
         from repro.kernels import ops as _kops
@@ -71,6 +92,15 @@ class StencilOperator(LinearOperator):
         from repro.kernels import ops as _kops
         return _kops.stencil_mv(self.bands, v.astype(self.dtype),
                                 offsets=self.offsets)
+
+    def rmm(self, v):  # (n, k) -> (n, k): A^T via the transposed band table
+        from repro.kernels import ops as _kops
+        if v.ndim != 2 or v.shape[0] != self.n:
+            raise ValueError(f"expected ({self.n}, k) slab, got {v.shape}")
+        if self._bands_t is None:
+            self._bands_t = _transpose_bands(self.bands, self.offsets)
+        return _kops.stencil_mv(self._bands_t, v.astype(self.dtype),
+                                offsets=self._offsets_t)
 
     def diag(self):
         if 0 in self.offsets:

@@ -48,18 +48,32 @@ class ToeplitzOperator(LinearOperator):
         self.dtype = jnp.result_type(c.dtype, r.dtype)
         # 2n-circulant first column; the n-th entry is never touched by the
         # top-left (n, n) block, zero keeps the embedding well-scaled.
-        col = jnp.concatenate(
-            [c, jnp.zeros((1,), self.dtype), r[1:][::-1]]).astype(self.dtype)
+        zero = jnp.zeros((1,), self.dtype)
+        col = jnp.concatenate([c, zero, r[1:][::-1]]).astype(self.dtype)
         self._m = 2 * n
         self._fcol = jnp.fft.rfft(col)
+        self._fcol_t = None              # transposed symbol, built on demand
 
-    def mm(self, v):  # (n, k) -> (n, k)
+    def _circulant_mm(self, fcol, v):
         if v.ndim != 2 or v.shape[0] != self.n:
             raise ValueError(f"expected ({self.n}, k) slab, got {v.shape}")
         vp = jnp.pad(v.astype(self.dtype), ((0, self._m - self.n), (0, 0)))
-        y = jnp.fft.irfft(self._fcol[:, None] * jnp.fft.rfft(vp, axis=0),
+        y = jnp.fft.irfft(fcol[:, None] * jnp.fft.rfft(vp, axis=0),
                           self._m, axis=0)
         return y[:self.n].astype(self.dtype)
+
+    def mm(self, v):  # (n, k) -> (n, k)
+        return self._circulant_mm(self._fcol, v)
+
+    def rmm(self, v):  # (n, k) -> (n, k): T^T via the swapped-symbol embedding
+        if self._fcol_t is None:
+            # transpose swaps first column and first row: T^T[i, j] = t_{j-i};
+            # lazy so mm-only uses never pay the extra rfft
+            zero = jnp.zeros((1,), self.dtype)
+            col_t = jnp.concatenate(
+                [self.r, zero, self.c[1:][::-1]]).astype(self.dtype)
+            self._fcol_t = jnp.fft.rfft(col_t)
+        return self._circulant_mm(self._fcol_t, v)
 
     def diag(self):
         return jnp.full((self.n,), self.c[0], self.dtype)

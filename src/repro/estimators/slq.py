@@ -80,12 +80,19 @@ def lanczos(mm, v0: jax.Array, num_steps: int):
 
 
 def logdet_slq(a, *, num_steps: int = 25, num_probes: int = 32,
-               key=None, seed: int = 0, mesh=None,
+               key=None, seed: int = 0, probes=None, mesh=None,
                axis_name: str = "rows") -> TraceEstimate:
     """Estimate ``log|det(A)|`` of an SPD matrix/operator/stack via SLQ.
 
     Returns a `TraceEstimate` (batched for (B, n, n) stacks): ``est`` is the
     logdet estimate, ``sem`` the Monte-Carlo standard error over probes.
+
+    ``probes`` supplies a pre-drawn (..., n, k) slab instead of sampling
+    ``num_probes`` Rademacher probes from ``key`` — used by the grad
+    machinery (`estimators.grad`) to share one probe set between forward
+    and backward passes.  Any isotropic (``E[v v^T] = I``) probe
+    distribution is weighted correctly (per-column ``||v||^2`` quadrature
+    weights, not a blanket ``n``).
     """
     op = as_operator(a, mesh=mesh, axis_name=axis_name)
     n = op.shape[-1]
@@ -95,8 +102,14 @@ def logdet_slq(a, *, num_steps: int = 25, num_probes: int = 32,
     if key is None:
         key = jax.random.PRNGKey(seed)
 
-    v0 = make_probes(key, n, num_probes, dtype=dtype,
-                     batch_shape=(batch,) if batch else ())
+    if probes is None:
+        v0 = make_probes(key, n, num_probes, dtype=dtype,
+                         batch_shape=(batch,) if batch else ())
+    else:
+        v0 = jnp.asarray(probes, dtype)
+        if v0.shape[-2] != n:
+            raise ValueError(
+                f"probes rows {v0.shape} do not match operator n={n}")
     alpha, beta = lanczos(op.mm, v0, m)
 
     # tridiagonal T per probe -> Gauss quadrature nodes/weights, batched eigh
@@ -109,7 +122,11 @@ def logdet_slq(a, *, num_steps: int = 25, num_probes: int = 32,
     # tau ~ 0; clip so log stays finite before the weight kills the term.
     tiny = jnp.asarray(jnp.finfo(dtype).tiny, dtype)
     quad = (tau2 * jnp.log(jnp.maximum(theta, tiny))).sum(-1)   # (..., k)
-    samples = jnp.asarray(n, dtype) * quad
+    # Weight each quadrature by its probe's squared norm: quad approximates
+    # u^T log(A) u for the UNIT vector u = v/||v||, so ||v||^2 * quad is the
+    # Hutchinson form v^T log(A) v — unbiased for any E[v v^T] = I probes.
+    # For Rademacher probes ||v||^2 == n exactly (the classical n * quad).
+    samples = (v0 * v0).sum(-2) * quad
     est, sem = mean_sem(samples)
     return TraceEstimate(est, sem, samples)
 

@@ -1,0 +1,600 @@
+"""Differentiable log-determinants (repro/estimators/grad.py).
+
+The contract under test:
+
+  * every exact method's ``jax.grad`` passes finite-difference checks and
+    equals the analytic ``inv(A).T`` — without differentiating through
+    pivot control flow;
+  * estimator methods return the Hutchinson pullback on the forward's own
+    probes — matching the exact ``A^{-T}`` within 3x its Monte-Carlo
+    standard error at a fixed seed, computed matrix-free (no dense
+    inverse/solve in the lowered backward HLO);
+  * structured operators receive structured cotangents (Kronecker factors,
+    Toeplitz first column, stencil bands) identical to what the dense path
+    would chain through the materialization;
+  * batching (vmap / logdet_batched) and jit (no recompile on reuse)
+    compose with the custom VJPs;
+  * the `rmm`/`transpose` solve hooks and the cg_solve zero-rhs early exit
+    behave.
+"""
+import importlib.util
+import pathlib
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import logdet, logdet_batched, pad_to_multiple, slogdet
+from repro.estimators import (
+    BatchedOperator,
+    DenseOperator,
+    KroneckerOperator,
+    LinearOperator,
+    ShardedOperator,
+    StencilOperator,
+    ToeplitzOperator,
+    cg_solve,
+    estimate_logdet,
+    logdet_chebyshev,
+    logdet_slq,
+    make_probes,
+    operator_grad_info,
+    register_operator_grad,
+)
+
+
+def make_spd(n, seed, shift=2.0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, 2 * n))
+    return x @ x.T / (2 * n) + shift * np.eye(n)
+
+
+def make_nonsym(n, seed):
+    """Well-conditioned non-symmetric matrix (diagonally dominated)."""
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, n)) * 0.3 + 2.0 * np.eye(n)
+
+
+def fd_directional(f, a, d, h=1e-5):
+    """Central finite difference of scalar f along direction d."""
+    return (float(f(a + h * d)) - float(f(a - h * d))) / (2 * h)
+
+
+SERIAL_EXACT = ("mc", "mc_staged", "mc_blocked", "ge")
+PARALLEL_EXACT = ("pmc", "pmc_blocked", "pge", "plu")
+
+
+# ------------------------------------------------- exact methods: gradcheck
+
+@pytest.mark.parametrize("method", SERIAL_EXACT)
+@pytest.mark.parametrize("n", [4, 16, 33])
+def test_exact_gradcheck_fd(method, n):
+    """Finite-difference check at N in {4, 16, 33 (padded inside)}."""
+    a = jnp.asarray(make_spd(n, seed=n))
+    f = lambda x: slogdet(x, method=method)[1]
+    g = jax.grad(f)(a)
+    rng = np.random.default_rng(7)
+    for _ in range(3):
+        d = jnp.asarray(rng.standard_normal((n, n)))
+        want = fd_directional(f, a, d)
+        got = float((g * d).sum())
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-7)
+
+
+@pytest.mark.parametrize("method", SERIAL_EXACT)
+def test_exact_grad_is_inverse_transpose(method):
+    a = make_spd(24, 3)
+    g = jax.grad(lambda x: slogdet(x, method=method)[1])(jnp.asarray(a))
+    np.testing.assert_allclose(np.asarray(g), np.linalg.inv(a).T,
+                               rtol=1e-9, atol=1e-11)
+
+
+@pytest.mark.parametrize("method", ("mc", "ge"))
+def test_exact_grad_nonsymmetric(method):
+    """d log|det A| / dA = A^{-T} holds for general (non-SPD) matrices."""
+    a = make_nonsym(20, 5)
+    g = jax.grad(lambda x: slogdet(x, method=method)[1])(jnp.asarray(a))
+    np.testing.assert_allclose(np.asarray(g), np.linalg.inv(a).T,
+                               rtol=1e-9, atol=1e-11)
+
+
+@pytest.mark.parametrize("method", PARALLEL_EXACT)
+def test_parallel_exact_grad(method, mesh1):
+    a = make_spd(12, 1)
+    g = jax.grad(
+        lambda x: slogdet(x, method=method, mesh=mesh1)[1])(jnp.asarray(a))
+    np.testing.assert_allclose(np.asarray(g), np.linalg.inv(a).T,
+                               rtol=1e-9, atol=1e-11)
+
+
+def test_exact_sign_has_zero_grad():
+    """The sign output is piecewise constant: cotangent discarded."""
+    a = jnp.asarray(make_nonsym(8, 0))
+    g = jax.grad(lambda x: slogdet(x, method="mc")[0])(a)
+    np.testing.assert_array_equal(np.asarray(g), 0.0)
+
+
+def test_exact_grad_through_padding():
+    """pad_to_multiple embeds diag(A, I): gradients of the block unchanged."""
+    a = jnp.asarray(make_spd(10, 2))
+    g_plain = jax.grad(lambda x: slogdet(x, method="mc")[1])(a)
+    g_pad = jax.grad(
+        lambda x: slogdet(pad_to_multiple(x, 8), method="mc")[1])(a)
+    np.testing.assert_allclose(np.asarray(g_pad), np.asarray(g_plain),
+                               rtol=1e-9, atol=1e-11)
+
+
+# -------------------------------------- estimator methods: Hutchinson VJP
+
+def _forward_probes(method, n, k, seed):
+    """The probe slab the named estimator draws internally for this seed."""
+    key = jax.random.PRNGKey(seed)
+    if method == "chebyshev":
+        key = jax.random.split(key)[1]
+    return np.asarray(make_probes(key, n, k, dtype=jnp.float64))
+
+
+@pytest.mark.parametrize("method,kw", [
+    ("chebyshev", dict(degree=48)),
+    ("slq", dict(num_steps=20)),
+])
+def test_estimator_grad_is_hutchinson_pullback(method, kw):
+    """The VJP must equal (1/k) sum_c (A^{-1} z_c) z_c^T on the forward's
+    own probes, up to the backward CG tolerance."""
+    n, k, seed = 32, 64, 3
+    a = make_spd(n, 0)
+    g = jax.grad(lambda x: slogdet(
+        x, method=method, num_probes=k, seed=seed, **kw)[1])(jnp.asarray(a))
+    z = _forward_probes(method, n, k, seed)
+    bar = (np.linalg.solve(a, z) @ z.T) / k
+    np.testing.assert_allclose(np.asarray(g), bar, rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("method,kw", [
+    ("chebyshev", dict(degree=48)),
+    ("slq", dict(num_steps=20)),
+])
+def test_estimator_grad_within_3sem_of_exact(method, kw):
+    """Acceptance: estimator VJP vs exact A^{-T} within 3*SEM, fixed seed."""
+    n, k, seed = 32, 64, 3
+    a = make_spd(n, 0)
+    g = np.asarray(jax.grad(lambda x: slogdet(
+        x, method=method, num_probes=k, seed=seed, **kw)[1])(jnp.asarray(a)))
+    z = _forward_probes(method, n, k, seed)
+    samples = np.einsum("ik,jk->ijk", np.linalg.solve(a, z), z)
+    sem = samples.std(-1, ddof=1) / np.sqrt(k)
+    err = np.linalg.norm(g - np.linalg.inv(a).T)
+    bound = 3.0 * np.sqrt((sem ** 2).sum())
+    assert err <= bound, (err, bound)
+
+
+@pytest.mark.parametrize("method", ("chebyshev", "slq"))
+def test_estimator_forward_value_unchanged_by_grad_path(method):
+    """estimate_logdet (custom-VJP path, externally shared probes) must be
+    bit-identical to calling the estimator directly."""
+    a = make_spd(48, 4)
+    direct_fn = {"chebyshev": logdet_chebyshev, "slq": logdet_slq}[method]
+    direct = direct_fn(jnp.asarray(a), num_probes=16, seed=9)
+    routed = estimate_logdet(a, method=method, num_probes=16, seed=9)
+    assert float(direct.est) == float(routed.est)
+    assert float(direct.sem) == float(routed.sem)
+
+
+def test_estimator_sem_and_samples_nondifferentiable():
+    a = jnp.asarray(make_spd(16, 1))
+    g = jax.grad(
+        lambda x: estimate_logdet(x, num_probes=8, degree=16).sem)(a)
+    np.testing.assert_array_equal(np.asarray(g), 0.0)
+
+
+def test_estimator_grad_cg_knobs():
+    """grad_cg_tol / grad_cg_maxiter control the backward solve."""
+    a = jnp.asarray(make_spd(24, 2))
+    f = lambda tol: jax.grad(lambda x: slogdet(
+        x, method="chebyshev", num_probes=8, degree=16,
+        grad_cg_tol=tol)[1])(a)
+    loose, tight = f(1e-2), f(1e-12)
+    assert jnp.isfinite(loose).all() and jnp.isfinite(tight).all()
+    # a 1-iteration budget must change (degrade) the pullback
+    g1 = jax.grad(lambda x: slogdet(
+        x, method="chebyshev", num_probes=8, degree=16,
+        grad_cg_maxiter=1)[1])(a)
+    assert float(jnp.abs(g1 - tight).max()) > 1e-6
+
+
+def test_estimator_grad_mesh_matches_dense(mesh1):
+    a = jnp.asarray(make_spd(16, 3))
+    kw = dict(num_probes=16, degree=32, seed=0)
+    gm = jax.grad(lambda x: slogdet(
+        x, method="chebyshev", mesh=mesh1, **kw)[1])(a)
+    gd = jax.grad(lambda x: slogdet(x, method="chebyshev", **kw)[1])(a)
+    np.testing.assert_allclose(np.asarray(gm), np.asarray(gd),
+                               rtol=1e-10, atol=1e-12)
+
+
+def test_probes_kwarg_validation():
+    with pytest.raises(ValueError, match="probes rows"):
+        logdet_chebyshev(jnp.asarray(make_spd(8, 0)),
+                         probes=jnp.ones((4, 3)))
+    with pytest.raises(ValueError, match="probes rows"):
+        logdet_slq(jnp.asarray(make_spd(8, 0)), probes=jnp.ones((4, 3)))
+
+
+# ------------------------------------------- structured operator pullbacks
+
+def _toeplitz_dense_jnp(c):
+    n = c.shape[0]
+    i = jnp.arange(n)
+    vals = jnp.concatenate([c[1:][::-1], c])
+    return vals[(i[:, None] - i[None, :]) + n - 1]
+
+
+def _stencil_dense_jnp(bands, n):
+    # offsets (-1, 0, 1) materialized with differentiable ops, matching
+    # StencilOperator.to_dense
+    return (jnp.diag(bands[1]) + jnp.diag(bands[2][:n - 1], 1)
+            + jnp.diag(bands[0][1:], -1))
+
+
+EST_KW = dict(method="slq", num_probes=16, num_steps=20, seed=5)
+
+
+def test_kron_pullback_factor_shaped():
+    na, nb = 5, 6
+    fa, fb = jnp.asarray(make_spd(na, 2)), jnp.asarray(make_spd(nb, 3))
+    ga, gb = jax.grad(lambda p: slogdet(
+        KroneckerOperator(p[0], p[1]), **EST_KW)[1])((fa, fb))
+    assert ga.shape == (na, na) and gb.shape == (nb, nb)
+
+
+def test_kron_pullback_matches_dense_path():
+    na, nb = 5, 6
+    fa, fb = jnp.asarray(make_spd(na, 2)), jnp.asarray(make_spd(nb, 3))
+    g_struct = jax.grad(lambda p: slogdet(
+        KroneckerOperator(p[0], p[1]), **EST_KW)[1])((fa, fb))
+    g_dense = jax.grad(lambda p: slogdet(
+        jnp.kron(p[0], p[1]), **EST_KW)[1])((fa, fb))
+    for gs, gd in zip(g_struct, g_dense):
+        np.testing.assert_allclose(np.asarray(gs), np.asarray(gd),
+                                   rtol=1e-7, atol=1e-9)
+
+
+def test_toeplitz_pullback_first_column_shaped():
+    n = 24
+    c = np.zeros(n)
+    c[0], c[1], c[2] = 2.5, -1.0, 0.25
+    g = jax.grad(lambda cc: slogdet(
+        ToeplitzOperator(cc), **EST_KW)[1])(jnp.asarray(c))
+    assert g.shape == (n,)
+    assert bool(jnp.isfinite(g).all())
+
+
+def test_toeplitz_pullback_matches_dense_path():
+    n = 24
+    c = np.zeros(n)
+    c[0], c[1], c[2] = 2.5, -1.0, 0.25
+    g_struct = jax.grad(lambda cc: slogdet(
+        ToeplitzOperator(cc), **EST_KW)[1])(jnp.asarray(c))
+    g_dense = jax.grad(lambda cc: slogdet(
+        _toeplitz_dense_jnp(cc), **EST_KW)[1])(jnp.asarray(c))
+    np.testing.assert_allclose(np.asarray(g_struct), np.asarray(g_dense),
+                               rtol=1e-7, atol=1e-9)
+
+
+def test_stencil_pullback_band_shaped():
+    n = 24
+    bands = jnp.asarray(np.stack([np.full(n, -1.0), np.full(n, 2.5),
+                                  np.full(n, -1.0)]))
+    g = jax.grad(lambda b: slogdet(
+        StencilOperator((-1, 0, 1), b), **EST_KW)[1])(bands)
+    assert g.shape == (3, n)
+    assert bool(jnp.isfinite(g).all())
+
+
+def test_stencil_pullback_matches_dense_path():
+    n = 24
+    bands = jnp.asarray(np.stack([np.full(n, -1.0), np.full(n, 2.5),
+                                  np.full(n, -1.0)]))
+    g_struct = jax.grad(lambda b: slogdet(
+        StencilOperator((-1, 0, 1), b), **EST_KW)[1])(bands)
+    g_dense = jax.grad(lambda b: slogdet(
+        _stencil_dense_jnp(b, n), **EST_KW)[1])(bands)
+    np.testing.assert_allclose(np.asarray(g_struct), np.asarray(g_dense),
+                               rtol=1e-7, atol=1e-9)
+
+
+def test_register_operator_grad_duck_type():
+    """A duck-typed operator opts into structured grads via the registry."""
+
+    class ScaledIdentity(LinearOperator):
+        def __init__(self, s, n):
+            self.s = s
+            self.shape = (n, n)
+            self.dtype = jnp.result_type(s)
+
+        def mm(self, v):
+            return self.s * v
+
+        def diag(self):
+            return jnp.full((self.n,), self.s)
+
+    register_operator_grad(
+        ScaledIdentity,
+        params=lambda op: op.s,
+        rebuild=lambda op, s: ScaledIdentity(s, op.n))
+    assert operator_grad_info(ScaledIdentity(jnp.asarray(2.0), 4)) is not None
+
+    n = 16
+    g = jax.grad(lambda s: estimate_logdet(
+        ScaledIdentity(s, n), method="slq", num_probes=8,
+        num_steps=8).est)(jnp.asarray(3.0))
+    # logdet(s I_n) = n log s  ->  d/ds = n / s (quadrature exact for c*I)
+    np.testing.assert_allclose(float(g), n / 3.0, rtol=1e-8)
+
+
+def test_unregistered_duck_operator_still_estimates():
+    """No registry entry: forward works; grad falls back to autodiff
+    through the recurrence (not asserted here, just no custom path)."""
+
+    class Duck:
+        def __init__(self, a):
+            self.a = a
+            self.shape = a.shape
+            self.dtype = a.dtype
+
+        def mm(self, v):
+            return self.a @ v
+
+    a = make_spd(24, 6)
+    res = estimate_logdet(Duck(jnp.asarray(a)), method="chebyshev",
+                          num_probes=32, degree=48, seed=0)
+    ref = np.linalg.slogdet(a)[1]
+    assert abs(float(res.est) - ref) / abs(ref) < 0.05
+
+
+# ------------------------------------------------------- batching and jit
+
+def test_vmap_grad_matches_batched_grad_exact():
+    """vmap(grad(logdet)) and grad(sum(logdet_batched)) agree exactly for
+    the deterministic mc path."""
+    stack = jnp.asarray(np.stack([make_spd(12, s) for s in range(4)]))
+    g_vmap = jax.vmap(jax.grad(lambda a: logdet(a, method="mc")))(stack)
+    g_batch = jax.grad(
+        lambda s: logdet_batched(s, method="mc").sum())(stack)
+    np.testing.assert_allclose(np.asarray(g_vmap), np.asarray(g_batch),
+                               rtol=1e-10, atol=1e-12)
+    ref = np.stack([np.linalg.inv(np.asarray(m)).T for m in stack])
+    np.testing.assert_allclose(np.asarray(g_batch), ref,
+                               rtol=1e-9, atol=1e-11)
+
+
+def test_batched_estimator_grad_is_blockwise_hutchinson():
+    """The batched VJP is the per-matrix Hutchinson pullback on the batched
+    probe slab (vmapped CG under the hood)."""
+    b_, n, k, seed = 3, 24, 48, 2
+    stack = np.stack([make_spd(n, s) for s in range(b_)])
+    g = np.asarray(jax.grad(lambda s: logdet_batched(
+        s, method="slq", num_probes=k, num_steps=20,
+        seed=seed).sum())(jnp.asarray(stack)))
+    z = np.asarray(make_probes(jax.random.PRNGKey(seed), n, k,
+                               dtype=jnp.float64, batch_shape=(b_,)))
+    for b in range(b_):
+        bar = (np.linalg.solve(stack[b], z[b]) @ z[b].T) / k
+        np.testing.assert_allclose(g[b], bar, rtol=1e-6, atol=1e-7)
+        sem = (np.einsum("ik,jk->ijk", np.linalg.solve(stack[b], z[b]),
+                         z[b]).std(-1, ddof=1) / np.sqrt(k))
+        err = np.linalg.norm(g[b] - np.linalg.inv(stack[b]).T)
+        assert err <= 3.0 * np.sqrt((sem ** 2).sum())
+
+
+def test_vmap_grad_estimator_shape_and_finite():
+    stack = jnp.asarray(np.stack([make_spd(12, s) for s in range(3)]))
+    g = jax.vmap(jax.grad(lambda a: logdet(
+        a, method="chebyshev", num_probes=8, degree=16, seed=0)))(stack)
+    assert g.shape == stack.shape
+    assert bool(jnp.isfinite(g).all())
+
+
+@pytest.mark.parametrize("method,kw", [
+    ("mc", {}),
+    ("chebyshev", dict(num_probes=8, degree=16, seed=0)),
+    ("slq", dict(num_probes=8, num_steps=10, seed=0)),
+])
+def test_grad_under_jit_no_recompile(method, kw):
+    """Same shapes on a second call must reuse the compiled executable."""
+    traces = []
+
+    def f(a):
+        traces.append(1)          # runs only while tracing
+        return slogdet(a, method=method, **kw)[1]
+
+    jf = jax.jit(jax.grad(f))
+    a = jnp.asarray(make_spd(16, 0))
+    g1 = jf(a)
+    g2 = jf(a + 0.01)
+    assert len(traces) == 1, f"recompiled: {len(traces)} traces"
+    assert g1.shape == g2.shape == (16, 16)
+
+
+@pytest.mark.parametrize("method,kw", [
+    ("chebyshev", dict(num_probes=8, degree=16)),
+    ("slq", dict(num_probes=8, num_steps=10)),
+])
+def test_estimator_backward_has_no_dense_solve(method, kw):
+    """Acceptance: the estimator backward pass is matrix-free — the lowered
+    grad HLO contains no LU/Cholesky/triangular-solve custom calls."""
+    a = jnp.asarray(make_spd(16, 0))
+    hlo = jax.jit(jax.grad(lambda x: slogdet(
+        x, method=method, **kw)[1])).lower(a).as_text().lower()
+    for marker in ("getrf", "getrs", "potrf", "trsm", "triangular_solve"):
+        assert marker not in hlo, f"dense solve marker {marker!r} in bwd HLO"
+
+
+def test_exact_backward_does_use_factorization():
+    """Contrast case: the exact path's backward inverse is allowed (and
+    expected) to factorize."""
+    a = jnp.asarray(make_spd(16, 0))
+    hlo = jax.jit(jax.grad(lambda x: slogdet(
+        x, method="mc")[1])).lower(a).as_text().lower()
+    assert any(m in hlo for m in ("getrf", "triangular_solve", "trsm"))
+
+
+# --------------------------------------------------- rmm / transposed solve
+
+def _rmm_cases(mesh1):
+    rng = np.random.default_rng(0)
+    nonsym = make_nonsym(12, 5)
+    c = np.zeros(12)
+    c[0], c[1], c[2] = 2.5, -1.0, 0.3
+    r = np.zeros(12)
+    r[0], r[1] = 2.5, 0.7
+    ka = rng.standard_normal((3, 3))
+    kb = rng.standard_normal((4, 4))
+    bands = rng.standard_normal((3, 12))
+    stack = np.stack([make_nonsym(12, s) for s in range(2)])
+    return {
+        "dense": DenseOperator(jnp.asarray(nonsym)),
+        "sharded": ShardedOperator(jnp.asarray(nonsym), mesh1),
+        "batched": BatchedOperator(jnp.asarray(stack)),
+        "toeplitz": ToeplitzOperator(jnp.asarray(c), jnp.asarray(r)),
+        "kron": KroneckerOperator(jnp.asarray(ka), jnp.asarray(kb)),
+        "stencil": StencilOperator((-2, 0, 1), jnp.asarray(bands)),
+    }
+
+
+@pytest.mark.parametrize("name", ["dense", "sharded", "batched", "toeplitz",
+                                  "kron", "stencil"])
+def test_rmm_matches_dense_transpose(name, mesh1, rng):
+    op = _rmm_cases(mesh1)[name]
+    dense = np.asarray(op.to_dense())
+    if name == "batched":
+        v = rng.standard_normal((2, 12, 4))
+        want = np.einsum("bji,bjk->bik", dense, v)
+        got = op.rmm(jnp.asarray(v))
+        single = op.rmv(jnp.asarray(v[..., 0]))
+        want_single = np.einsum("bji,bj->bi", dense, v[..., 0])
+    else:
+        v = rng.standard_normal((12, 4))
+        want = dense.T @ v
+        got = op.rmm(jnp.asarray(v))
+        single = op.rmv(jnp.asarray(v[:, 0]))
+        want_single = dense.T @ v[:, 0]
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-11, atol=1e-11)
+    np.testing.assert_allclose(np.asarray(single), want_single,
+                               rtol=1e-11, atol=1e-11)
+
+
+def test_base_rmm_defaults_to_mm():
+    """Protocol default: symmetric assumption routes rmm through mm."""
+
+    class Sym(LinearOperator):
+        def __init__(self, a):
+            self.a = a
+            self.shape = a.shape
+            self.dtype = a.dtype
+
+        def mm(self, v):
+            return self.a @ v
+
+    a = jnp.asarray(make_spd(8, 0))
+    op = Sym(a)
+    v = jnp.asarray(np.random.default_rng(0).standard_normal((8, 2)))
+    np.testing.assert_allclose(np.asarray(op.rmm(v)), np.asarray(op.mm(v)))
+    np.testing.assert_allclose(np.asarray(op.rmv(v[:, 0])),
+                               np.asarray(op.mv(v[:, 0])))
+
+
+@pytest.mark.parametrize("structure", ["dense", "toeplitz", "stencil"])
+def test_cg_transpose_solves_transposed_system(structure, rng):
+    """cg_solve(..., transpose=True) applies A^T through rmm; on symmetric
+    SPD operators it must agree with the plain solve, and it goes through
+    the transposed-symbol code path for the structured backends."""
+    n = 16
+    if structure == "dense":
+        op = DenseOperator(jnp.asarray(make_spd(n, 0)))
+    elif structure == "toeplitz":
+        c = np.zeros(n)
+        c[0], c[1] = 2.5, -1.0
+        op = ToeplitzOperator(jnp.asarray(c))
+    else:
+        op = StencilOperator((-1, 0, 1),
+                             jnp.asarray([-1.0, 2.5, -1.0]), n=n)
+    dense = np.asarray(op.to_dense())
+    b = rng.standard_normal((n, 3))
+    res = cg_solve(op, jnp.asarray(b), transpose=True, tol=1e-12)
+    assert bool(res.converged)
+    np.testing.assert_allclose(np.asarray(res.x),
+                               np.linalg.solve(dense.T, b),
+                               rtol=1e-8, atol=1e-8)
+
+
+# ------------------------------------------------------- cg zero-rhs fix
+
+def test_cg_zero_rhs_early_exit():
+    """Regression: an all-zero rhs must return x=0 after 0 iterations
+    instead of maxiter guarded 0/0 no-op steps."""
+    op = DenseOperator(jnp.asarray(make_spd(16, 0)))
+    res = cg_solve(op, jnp.zeros((16, 3)))
+    assert int(res.iters) == 0
+    assert bool(res.converged)
+    np.testing.assert_array_equal(np.asarray(res.x), 0.0)
+    np.testing.assert_array_equal(np.asarray(res.resnorm), 0.0)
+
+
+def test_cg_zero_rhs_overrides_x0():
+    """With b = 0 the unique SPD solution is 0 — any x0 guess is discarded
+    without spending iterations."""
+    op = DenseOperator(jnp.asarray(make_spd(16, 0)))
+    res = cg_solve(op, jnp.zeros((16,)), x0=jnp.ones((16,)))
+    assert int(res.iters) == 0
+    assert bool(res.converged)
+    np.testing.assert_array_equal(np.asarray(res.x), 0.0)
+
+
+def test_cg_mixed_zero_and_nonzero_columns(rng):
+    a = make_spd(16, 0)
+    op = DenseOperator(jnp.asarray(a))
+    b = rng.standard_normal((16, 3))
+    b[:, 1] = 0.0
+    res = cg_solve(op, jnp.asarray(b), tol=1e-12)
+    assert bool(res.converged)
+    assert int(res.iters) > 0
+    x = np.asarray(res.x)
+    np.testing.assert_array_equal(x[:, 1], 0.0)
+    np.testing.assert_allclose(x[:, [0, 2]],
+                               np.linalg.solve(a, b[:, [0, 2]]),
+                               rtol=1e-8, atol=1e-8)
+
+
+# ------------------------------------------------------------ gmm_fit demo
+
+def _load_gmm_fit():
+    path = (pathlib.Path(__file__).resolve().parent.parent
+            / "examples" / "gmm_fit.py")
+    spec = importlib.util.spec_from_file_location("gmm_fit", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.mark.parametrize("method", ["chebyshev", "mc"])
+def test_gmm_fit_nll_decreases(method):
+    """Acceptance: gradient training through the (batched) logdet VJP
+    decreases the mixture NLL on synthetic data."""
+    mod = _load_gmm_fit()
+    hist = mod.train(dim=6, components=2, samples=160, steps=25,
+                     method=method, num_probes=8, lr=0.05, seed=0,
+                     log_every=0)
+    assert hist["nll"][-1] < hist["nll"][0], hist["nll"][:3] + hist["nll"][-3:]
+
+
+def test_gmm_fit_estimator_tracks_exact_logdet():
+    """The estimator-path training monitor agrees with the closed-form
+    cholesky logdet it parameterizes (sanity of the whole wiring)."""
+    mod = _load_gmm_fit()
+    hist = mod.train(dim=6, components=2, samples=120, steps=5,
+                     method="slq", num_probes=16, lr=0.05, seed=1,
+                     log_every=0)
+    assert np.isfinite(hist["nll"]).all()
