@@ -31,11 +31,18 @@ parameters (Kronecker factors / Toeplitz symbol / stencil bands).  The
 ``pass`` field keys the regression gate (benchmarks/check_regression.py)
 so backward-pass time is gated exactly like forward.
 
+``--methods`` may include ``auto``: those rows go through ``repro.plan(a,
+method="auto")`` and carry a ``method_used`` field recording what the
+cost model picked — sweep ``--full --methods auto,mc_staged,slq`` to see
+the selector flip from exact condensation to estimators at the dense
+crossover (n ~ 2400 per device at default budgets) and stay on
+estimators for every structured operator.
+
     PYTHONPATH=src python -m benchmarks.estimators_bench
     PYTHONPATH=src python -m benchmarks.estimators_bench --operator kron \
         --methods chebyshev,slq
     PYTHONPATH=src python -m benchmarks.estimators_bench --full \
-        --methods mc_staged,chebyshev,slq
+        --methods auto,mc_staged,chebyshev,slq
     PYTHONPATH=src python -m benchmarks.estimators_bench --grad
 """
 from __future__ import annotations
@@ -95,31 +102,70 @@ def make_operator(structure: str, n: int, seed: int):
                      f"choose from {OPERATORS}")
 
 
-def grad_target(structure, a, method, kw):
+def grad_target(structure, a, plan_):
     """(scalar_fn, params) for jax.value_and_grad on this structure.
 
     Dense inputs differentiate with respect to the matrix entries;
     structured operators with respect to their own parameters, rebuilt
-    inside the traced function so the structured pullback engages.
+    inside the traced function so the structured pullback engages.  The
+    plan is compiled once outside the traced function — only execution is
+    timed/traced.
     """
-    from repro.core import slogdet
     from repro.estimators import (
         KroneckerOperator, StencilOperator, ToeplitzOperator,
     )
 
     if structure == "dense":
-        return (lambda p: slogdet(p, method=method, **kw)[1]), a
+        return (lambda p: plan_.logdet(p)), a
     if structure == "kron":
-        return (lambda p: slogdet(KroneckerOperator(p[0], p[1]),
-                                  method=method, **kw)[1]), (a.a, a.b)
+        return (lambda p: plan_.logdet(KroneckerOperator(p[0], p[1]))), \
+            (a.a, a.b)
     if structure == "toeplitz":
-        return (lambda p: slogdet(ToeplitzOperator(p),
-                                  method=method, **kw)[1]), a.c
+        return (lambda p: plan_.logdet(ToeplitzOperator(p))), a.c
     if structure == "stencil":
         offsets = a.offsets
-        return (lambda p: slogdet(StencilOperator(offsets, p),
-                                  method=method, **kw)[1]), a.bands
+        return (lambda p: plan_.logdet(StencilOperator(offsets, p))), a.bands
     raise ValueError(structure)
+
+
+def _bench_auto(a, ld_ref, n_actual, structure, args):
+    """Time the auto-selector's pick for this (n, structure) cell.
+
+    The interesting number is WHERE the cost model flips from exact
+    condensation to estimators (dense: near n ~ 2400 per device at default
+    budgets; structured operators: estimators at any n) — the emitted rows
+    carry ``method_used`` so the crossover is visible in the JSON/CSV, and
+    the plan is built once so the timings measure execution only.
+    """
+    import jax
+    import repro
+
+    p = repro.plan(a, method="auto", validate=False)
+    res = p(a)
+    t = timeit(lambda x: p.slogdet(x)[1], a, warmup=1, iters=args.iters)
+    rec = {"n": n_actual, "method": "auto", "method_used": p.method,
+           "operator": structure, "pass": "fwd", "seconds": t,
+           "logdet_ref": ld_ref, "logdet": float(res.logabsdet),
+           "rel_err": abs(float(res.logabsdet) - ld_ref) / abs(ld_ref)}
+    if res.sem is not None and float(res.sem) > 0:
+        rec["sem"] = float(res.sem)
+    out = [rec]
+    print(f"n={n_actual:5d} {structure:>8s} {'auto':>10s} "
+          f" fwd: {t*1e3:9.1f} ms  rel_err={rec['rel_err']:.2e}  "
+          f"-> {p.method}")
+    if args.grad:
+        tg = timeit(lambda x: jax.block_until_ready(p.value_and_grad(x)[1]),
+                    a, warmup=1, iters=args.iters)
+        resg, _ = p.value_and_grad(a)
+        out.append({"n": n_actual, "method": "auto", "method_used": p.method,
+                    "operator": structure, "pass": "grad", "seconds": tg,
+                    "logdet_ref": ld_ref, "logdet": float(resg.logabsdet),
+                    "rel_err": abs(float(resg.logabsdet) - ld_ref)
+                    / abs(ld_ref)})
+        print(f"n={n_actual:5d} {structure:>8s} {'auto':>10s} "
+              f"grad: {tg*1e3:9.1f} ms  rel_err={out[-1]['rel_err']:.2e}  "
+              f"-> {p.method}")
+    return out
 
 
 def main(argv=None):
@@ -127,7 +173,7 @@ def main(argv=None):
     jax.config.update("jax_enable_x64", True)
     import jax.numpy as jnp  # noqa: F401  (x64 must be set before use)
 
-    from repro.core import slogdet
+    import repro
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--sizes", type=str, default="")
@@ -162,6 +208,10 @@ def main(argv=None):
             a, ld_ref, n_actual = make_operator(structure, n, args.seed)
 
             for method in methods:
+                if method == "auto":
+                    records.extend(_bench_auto(a, ld_ref, n_actual,
+                                               structure, args))
+                    continue
                 if structure != "dense" and method not in ("chebyshev",
                                                            "slq"):
                     print(f"n={n:5d} {method:>10s}: skipped (needs a "
@@ -175,8 +225,11 @@ def main(argv=None):
                     kw = dict(num_probes=args.num_probes,
                               num_steps=args.num_steps, seed=args.seed)
 
+                # compile once; the timed loop executes the plan only
+                p_method = repro.plan(a, method=method, validate=False, **kw)
+
                 def run(x):
-                    return slogdet(x, method=method, **kw)
+                    return p_method.slogdet(x)
 
                 t = timeit(run, a, warmup=1, iters=args.iters)
                 rec = {"n": n_actual, "method": method,
@@ -185,10 +238,9 @@ def main(argv=None):
                 if method in EXACT:
                     _, ld = run(a)
                 else:
-                    # one estimator pass yields both value and standard error
-                    from repro.estimators import estimate_logdet
-                    res = estimate_logdet(a, method=method, **kw)
-                    ld = res.est
+                    # one unified-result pass yields value + standard error
+                    res = p_method(a)
+                    ld = res.logabsdet
                     rec["sem"] = float(res.sem)
                 rec["logdet"] = float(ld)
                 rec["rel_err"] = abs(float(ld) - ld_ref) / abs(ld_ref)
@@ -198,7 +250,7 @@ def main(argv=None):
 
                 if not args.grad:
                     continue
-                fn, params = grad_target(structure, a, method, kw)
+                fn, params = grad_target(structure, a, p_method)
                 vg = jax.jit(jax.value_and_grad(fn))
                 tg = timeit(vg, params, warmup=1, iters=args.iters)
                 val, _ = vg(params)
@@ -219,9 +271,10 @@ def main(argv=None):
     out = OUT_DIR / "estimators.json"
     out.write_text(json.dumps(records, indent=2))
     write_csv("estimators.csv",
-              ["n", "method", "operator", "pass", "seconds", "logdet",
-               "rel_err"],
-              [[r["n"], r["method"], r["operator"], r["pass"],
+              ["n", "method", "method_used", "operator", "pass", "seconds",
+               "logdet", "rel_err"],
+              [[r["n"], r["method"], r.get("method_used", r["method"]),
+                r["operator"], r["pass"],
                 f"{r['seconds']:.6f}", f"{r['logdet']:.6f}",
                 f"{r['rel_err']:.3e}"]
                for r in records])

@@ -18,7 +18,7 @@ CHILD = """
 import json, time
 import numpy as np
 import jax
-from repro.core import slogdet
+import repro
 from repro.launch.mesh import make_rows_mesh
 from repro.data.synthetic import random_matrix
 
@@ -34,7 +34,8 @@ for N in sizes:
         kw = dict(mesh=mesh) if m.startswith("p") else {{}}
         if m == "plu":
             kw["nb"] = 1      # the paper's ScaLAPACK setting (blocksize 1)
-        f = lambda: slogdet(a, method=m, **kw)
+        plan = repro.plan(a, method=m, **kw)   # compile once, time execution
+        f = lambda: plan.slogdet(a)
         ld = float(f()[1])            # warmup + correctness
         assert abs(ld - ref) < 1e-6 * max(1.0, abs(ref)), (m, N, ld, ref)
         ts = []

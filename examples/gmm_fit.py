@@ -8,8 +8,10 @@ example *trains* the mixture by SGD on the negative log-likelihood
 
 with ``Sigma_k = L_k L_k^T`` parameterized by its Cholesky factor (lower
 triangle free, diagonal softplus-positive), so every step needs
-``d NLL / d Sigma`` — which flows through ``repro.core.logdet_batched``'s
-custom VJP (repro/estimators/grad.py).  With an estimator method the
+``d NLL / d Sigma`` — which flows through a batched `repro.plan`'s custom
+VJP (repro/estimators/grad.py).  The plan is compiled once before the
+training loop; every SGD step executes it with a fresh PRNG key (runtime
+input — no recompile).  With an estimator method the
 whole logdet gradient stays matrix-free: the backward pass is one batched
 CG solve on the forward's probe slab, vmapped over the K covariances; with
 ``--method mc`` it is the exact condensation forward and the analytic
@@ -38,7 +40,7 @@ try:
 except ImportError:                      # keep the example/test runnable
     optax = None
 
-from repro.core import logdet_batched
+import repro
 
 
 # ---------------------------------------------------------------- fallback
@@ -101,21 +103,29 @@ def cholesky_factors(params):
     return low + jnp.einsum("kd,de->kde", diag, jnp.eye(diag.shape[-1]))
 
 
-def nll(params, x, key, *, method, num_probes, degree, num_steps):
-    """Mixture NLL; the logdet term rides the batched custom VJP."""
+def make_logdet_plan(components, dim, *, method, num_probes, degree,
+                     num_steps):
+    """Compile the (K, d, d) -> (K,) logdet plan once, before training."""
+    shape = (components, dim, dim)
+    if method == "mc":
+        return repro.plan(shape, method="mc")
+    if method == "chebyshev":
+        return repro.plan(shape, method="chebyshev",
+                          num_probes=num_probes, degree=degree)
+    return repro.plan(shape, method="slq",
+                      num_probes=num_probes, num_steps=num_steps)
+
+
+def nll(params, x, key, *, ld_plan):
+    """Mixture NLL; the logdet term rides the batched plan's custom VJP."""
     chol = cholesky_factors(params)                     # (K, d, d)
     sigma = jnp.einsum("kij,klj->kil", chol, chol)      # L L^T, SPD stack
     d = x.shape[1]
 
-    if method == "mc":
-        ld = logdet_batched(sigma, method="mc")
+    if ld_plan.method == "mc":
+        ld = ld_plan.logdet(sigma)
     else:
-        kw = dict(num_probes=num_probes, key=key)
-        if method == "chebyshev":
-            kw["degree"] = degree
-        else:
-            kw["num_steps"] = num_steps
-        ld = logdet_batched(sigma, method=method, **kw)
+        ld = ld_plan.logdet(sigma, key=key)
 
     # Mahalanobis through the factor: ||L^{-1}(x - mu)||^2, O(d^2)/sample
     xc = x[None, :, :] - params["mu"][:, None, :]       # (K, n, d)
@@ -144,9 +154,11 @@ def train(*, dim=32, components=3, samples=600, steps=100, method="chebyshev",
     data, _ = make_data(rng, dim, components, samples)
     x = jnp.asarray(data)
     params = init_params(rng, dim, components, x)
+    ld_plan = make_logdet_plan(components, dim, method=method,
+                               num_probes=num_probes, degree=degree,
+                               num_steps=num_steps)
 
-    loss_fn = lambda p, k: nll(p, x, k, method=method, num_probes=num_probes,
-                               degree=degree, num_steps=num_steps)
+    loss_fn = lambda p, k: nll(p, x, k, ld_plan=ld_plan)
     value_and_grad = jax.jit(jax.value_and_grad(loss_fn))
     opt = _make_optimizer(lr)
     opt_state = opt.init(params)
@@ -159,10 +171,7 @@ def train(*, dim=32, components=3, samples=600, steps=100, method="chebyshev",
         if method == "mc":
             return jnp.zeros(())
         sigma = jnp.einsum("kij,klj->kil", chol, chol)
-        kw = dict(num_probes=num_probes, key=k)
-        kw["degree" if method == "chebyshev" else "num_steps"] = (
-            degree if method == "chebyshev" else num_steps)
-        est = logdet_batched(sigma, method=method, **kw)
+        est = ld_plan.logdet(sigma, key=k)
         return jnp.abs(est - exact).mean()
 
     history = {"nll": [], "ld_gap": []}

@@ -8,9 +8,16 @@ Two costs per EM iteration, and two regimes for each:
 
   logdet(Sigma)  --logdet exact        parallel condensation, O(d^3)
                  --logdet chebyshev|slq stochastic estimators, O(matvecs)
+                 --logdet auto         repro.plan's cost model decides
   Mahalanobis    --solver direct        jnp.linalg.solve, O(d^3)
                  --solver cg            matrix-free conjugate gradient on
                                         the SAME operator, O(iters) matvecs
+
+All log-determinants go through the plan API: each path builds its
+`repro.plan(...)` ONCE (outside the EM loop) and executes it per
+iteration — method resolution, padding and jit tracing happen a single
+time, and every path returns the same `LogdetResult` (estimator paths
+report their Monte-Carlo standard error alongside the value).
 
 With ``--solver cg`` the covariances are never materialized: each
 component's Sigma = Xc^T diag(w) Xc / sum(w) + ridge*I is held as an
@@ -32,8 +39,8 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import logdet_batched, slogdet
-from repro.estimators import LinearOperator, cg_solve, estimate_logdet
+import repro
+from repro.estimators import LinearOperator, cg_solve
 from repro.launch.mesh import make_rows_mesh
 
 
@@ -61,27 +68,55 @@ class EmpiricalCovOperator(LinearOperator):
         return (self.w[:, None] * self.xc**2).sum(0) / self.wsum + self.ridge
 
 
-def batched_logdets(covs, *, how: str, mesh, seed: int = 0):
-    """(K,) logdets of a (K, d, d) covariance stack, by configured path."""
+def make_batched_logdet_plan(k: int, d: int, *, how: str, mesh):
+    """Compile the (K, d, d) stack logdet path ONCE, before the EM loop.
+
+    Returns ``(plan, per_matrix)`` — ``per_matrix`` flags the distributed
+    exact path, which condenses one covariance at a time over the mesh.
+    """
     if how == "exact":
         if mesh.size > 1:
-            # distributed exact condensation, one covariance at a time
-            return jnp.stack([slogdet(c, method="pmc", mesh=mesh)[1]
-                              for c in covs])
-        return logdet_batched(covs, method="mc")
-    kw = dict(num_probes=32, seed=seed)
-    if how == "chebyshev":
-        kw["degree"] = 64
-    return logdet_batched(covs, method=how, **kw)
+            return repro.plan((d, d), method="pmc", mesh=mesh), True
+        return repro.plan((k, d, d), method="mc"), False
+    kw = {}
+    if how != "auto":
+        kw["num_probes"] = 32
+        if how == "chebyshev":
+            kw["degree"] = 64
+    p = repro.plan((k, d, d), method=how, **kw)
+    if how == "auto":
+        print(f"[plan] auto-selected logdet method: {p.method} "
+              f"(est. {p.diagnostics.flops_est:.2e} FLOPs)")
+    return p, False
+
+
+def batched_logdets(covs, plan_, per_matrix: bool, seed: int = 0):
+    """(K,) logdets of a (K, d, d) covariance stack through a plan."""
+    if per_matrix:
+        return jnp.stack([plan_.logdet(c) for c in covs])
+    if plan_.method in ("chebyshev", "slq"):
+        res = plan_(covs, key=jax.random.PRNGKey(seed))
+        return res.logabsdet
+    return plan_(covs).logabsdet
 
 
 def operator_logdets(ops, *, how: str, seed: int = 0):
-    """(K,) logdets of a list of implicit covariance operators."""
-    kw = dict(num_probes=32, seed=seed)
-    if how == "chebyshev":
-        kw["degree"] = 64
-    return jnp.stack([estimate_logdet(op, method=how, **kw).est
-                      for op in ops])
+    """(K,) logdets of implicit covariance operators, one plan per op.
+
+    ``how="auto"`` lets the cost model route each operator: the duck-typed
+    `EmpiricalCovOperator` is not materializable, so the selector stays in
+    the estimator family regardless of d.
+    """
+    kw = {}
+    if how != "auto":
+        kw["num_probes"] = 32
+        if how == "chebyshev":
+            kw["degree"] = 64
+    outs = []
+    for op in ops:
+        p = repro.plan(op, method=how, **kw)
+        outs.append(p(key=jax.random.PRNGKey(seed)).logabsdet)
+    return jnp.stack(outs)
 
 
 def gaussian_loglik(x, mu, solve_fn, ld):
@@ -103,9 +138,10 @@ def main():
     ap.add_argument("--components", type=int, default=3)
     ap.add_argument("--samples", type=int, default=600)
     ap.add_argument("--iters", type=int, default=5)
-    ap.add_argument("--logdet", choices=("exact", "chebyshev", "slq"),
+    ap.add_argument("--logdet", choices=("exact", "chebyshev", "slq", "auto"),
                     default="exact",
-                    help="logdet path for the covariance stack")
+                    help="logdet path for the covariance stack ('auto' "
+                         "lets repro.plan's cost model choose)")
     ap.add_argument("--solver", choices=("direct", "cg"), default="direct",
                     help="Mahalanobis solve: dense factorization or "
                          "matrix-free CG on implicit covariance operators")
@@ -138,6 +174,12 @@ def main():
     resp_w = jnp.zeros((x.shape[0], k))
     ridge = 1.0
 
+    if args.solver != "cg":
+        # the plan (method resolution + compile) happens once, here; the
+        # EM loop below only executes it
+        ld_plan, per_matrix = make_batched_logdet_plan(
+            k, d, how=logdet_how, mesh=mesh)
+
     for it in range(args.iters):
         # E-step: per-component logdet + Mahalanobis solve, then the
         # responsibilities via the per-component log-densities
@@ -153,7 +195,7 @@ def main():
                 ((resp_w[:, j, None] * (x - mu[j])).T @ (x - mu[j]))
                 / (resp_w[:, j].sum() + 1e-9) + ridge * jnp.eye(d)
                 for j in range(k)])
-            lds = batched_logdets(cov, how=logdet_how, mesh=mesh, seed=it)
+            lds = batched_logdets(cov, ld_plan, per_matrix, seed=it)
             solvers = [(lambda rhs, c=c: jnp.linalg.solve(c, rhs))
                        for c in cov]
         logp = jnp.stack([gaussian_loglik(x, mu[j], solvers[j], lds[j])

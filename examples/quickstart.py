@@ -1,4 +1,8 @@
-"""Quickstart: log-determinant of a large matrix with every method.
+"""Quickstart: log-determinant of a large matrix with every method,
+through the plan/execute API (`repro.plan`): each method compiles into a
+reusable `LogdetPlan` whose execution returns a unified `LogdetResult`
+(sign, logabsdet, Monte-Carlo sem, diagnostics).  The last row lets the
+``method="auto"`` cost model pick for itself.
 
     PYTHONPATH=src python examples/quickstart.py [--n 512]
 
@@ -15,7 +19,8 @@ jax.config.update("jax_enable_x64", True)
 
 import numpy as np
 
-from repro.core import slogdet, METHODS
+import repro
+from repro.core import METHODS
 from repro.data.synthetic import random_matrix
 from repro.launch.mesh import make_rows_mesh
 
@@ -38,21 +43,24 @@ def main():
     print(f"devices: {jax.device_count()}  (methods p* use all of them)\n")
 
     estimators = {"chebyshev", "slq"}
-    for m in METHODS:
+    for m in METHODS + ("auto",):
         kw = dict(mesh=mesh) if m.startswith("p") else {}
         x, want_s, want_ld = a, s_ref, ld_ref
-        if m in estimators:
-            kw = dict(num_probes=32, seed=0)
+        if m in estimators or m == "auto":
+            kw = dict(num_probes=32, seed=0) if m != "auto" else {}
             x, want_s, want_ld = a_spd, 1.0, ld_spd_ref
-        t0 = time.perf_counter()
-        s, ld = slogdet(x, method=m, **kw)
-        jax.block_until_ready(ld)
-        dt = time.perf_counter() - t0
+        plan = repro.plan(x, method=m, **kw)     # compile once ...
+        res = plan()                             # ... execute
+        s, ld = res                              # LogdetResult unpacks
+        dt = res.diagnostics.wall_time_s
         err = abs(float(ld) - want_ld)
-        tol = abs(want_ld) * 2e-2 if m in estimators else 1e-8
+        stochastic = res.method_used in estimators
+        tol = abs(want_ld) * 2e-2 if stochastic else 1e-8
         flag = "OK " if (float(s) == want_s and err < tol) else "BAD"
-        note = "  (SPD, stochastic)" if m in estimators else ""
-        print(f"  {m:12s} sign={float(s):+.0f} logdet={float(ld):.12f} "
+        note = f"  (SPD, sem={float(res.sem):.2e})" if stochastic else ""
+        label = m if m == res.method_used else f"{m}->{res.method_used}"
+        print(f"  {label:16s} sign={float(s):+.0f} "
+              f"logdet={float(ld):.12f} "
               f"|err|={err:.2e}  {dt*1e3:8.1f} ms  [{flag}]{note}")
 
 

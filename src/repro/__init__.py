@@ -1,0 +1,36 @@
+"""repro — parallel matrix condensation for log-determinants, at scale.
+
+Public entry point is the plan/execute API::
+
+    import repro
+
+    p = repro.plan((4096, 4096), method="auto")   # compile once
+    result = p(a)                                 # LogdetResult
+    result2 = p(a2)                               # no re-trace
+
+`repro.plan` resolves the method (``"auto"`` runs a cost model over size,
+operator structure, device count and requested accuracy), validates a
+typed config, and returns a `LogdetPlan` holding a pre-jitted executable.
+Every path returns a `LogdetResult` (sign, logabsdet, sem, method_used,
+diagnostics).  Subsystems:
+
+  repro.core         exact condensation / elimination kernels + the plan
+  repro.estimators   stochastic estimators, LinearOperator backends, VJPs
+  repro.kernels      Pallas kernels (matvec, stencil, condensation steps)
+
+The legacy string API (``repro.core.slogdet``) survives one release as a
+deprecated shim — see docs/api.md for the migration guide.
+"""
+from repro.core.configs import (
+    ChebyshevConfig, ExactConfig, SLQConfig,
+)
+from repro.core.result import Diagnostics, LogdetResult
+from repro.core.plan import (
+    LogdetPlan, ProblemSpec, plan, select_method, spec_of,
+)
+
+__all__ = [
+    "plan", "LogdetPlan", "ProblemSpec", "select_method", "spec_of",
+    "ExactConfig", "ChebyshevConfig", "SLQConfig",
+    "LogdetResult", "Diagnostics",
+]

@@ -1,9 +1,7 @@
 """Core: the paper's contribution — distributed log-determinant via
-parallel matrix condensation, plus the baselines it is evaluated against."""
+parallel matrix condensation, plus the baselines it is evaluated against,
+fronted by the compiled plan/execute API (`repro.plan`)."""
 
-from repro.core.api import (
-    slogdet, logdet, logdet_batched, pad_to_multiple, METHODS,
-)
 from repro.core.condense import (
     slogdet_condense,
     slogdet_condense_staged,
@@ -19,9 +17,22 @@ from repro.core.blocked import (
 from repro.core.gaussian import slogdet_ge, parallel_slogdet_ge
 from repro.core.parallel import parallel_slogdet_mc
 from repro.core.scalapack import parallel_slogdet_lu
+from repro.core.api import (
+    slogdet, logdet, logdet_batched, pad_to_multiple, METHODS,
+)
+from repro.core.configs import (
+    ChebyshevConfig, ExactConfig, SLQConfig, config_for,
+)
+from repro.core.result import Diagnostics, LogdetResult
+from repro.core.plan import (
+    LogdetPlan, ProblemSpec, plan, select_method, spec_of,
+)
 
 __all__ = [
     "slogdet", "logdet", "logdet_batched", "pad_to_multiple", "METHODS",
+    "plan", "LogdetPlan", "ProblemSpec", "select_method", "spec_of",
+    "ExactConfig", "ChebyshevConfig", "SLQConfig", "config_for",
+    "LogdetResult", "Diagnostics",
     "slogdet_condense", "slogdet_condense_staged", "condense_steps",
     "combine_slogdet", "slogdet_condense_blocked",
     "parallel_slogdet_mc_blocked", "panel_factor", "apply_panel",

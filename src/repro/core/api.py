@@ -1,86 +1,41 @@
-"""Public log-determinant API.
+"""Legacy string-dispatch log-determinant API — deprecated shims over
+``repro.plan``.
 
-``slogdet(a, method=..., mesh=...)`` dispatches to every implementation in the
-framework and transparently pads non-divisible sizes (the paper assumes
-``N % P == 0``; we embed A into ``diag(A, I)`` which leaves the determinant
-unchanged and keeps max-|.| pivoting stable — identity rows condense to
-no-ops).
+``slogdet(a, method=..., mesh=..., **kwargs)`` and ``logdet_batched`` are
+kept for one release as thin wrappers that build (and cache) a
+`repro.core.plan.LogdetPlan` per (spec, method, config, mesh) and execute
+it, so existing callers keep identical numerics, error behavior and
+gradient rules while emitting a `DeprecationWarning`.  New code should
+build a plan once and call it:
 
-Exact methods (any square matrix, O(N^3)):
-  mc            serial matrix condensation (paper baseline)           [1 dev]
-  mc_staged     geometric shape-staged condensation                   [1 dev]
-  mc_blocked    serial rank-K panel condensation                      [1 dev]
-  ge            serial Gaussian elimination w/ partial pivoting       [1 dev]
-  pmc           parallel MC  (paper's algorithm)                      [mesh]
-  pmc_blocked   parallel blocked MC (beyond-paper)                    [mesh]
-  pge           parallel GE  (paper's baseline)                       [mesh]
-  plu           blocked-cyclic LU ("ScaLAPACK" baseline, nb param)    [mesh]
+    p = repro.plan((n, n), method="auto")     # or a concrete method name
+    sign, logabsdet = p(a)                    # LogdetResult unpacks
 
-Stochastic estimators (SPD matrices, O(degree * probes) matvecs — see
-repro/estimators; sub-cubic, matrix-free, mesh-shardable):
-  chebyshev     stochastic Chebyshev expansion (Han et al.)       [1 dev|mesh]
-  slq           stochastic Lanczos quadrature (Ubaru et al.)      [1 dev|mesh]
+See docs/api.md for the full plan lifecycle, the typed config reference
+(`ExactConfig` / `ChebyshevConfig` / `SLQConfig`), the method decision
+tree behind ``method="auto"``, and the migration guide from this module's
+string API.
 
-Estimator methods also accept any ``repro.estimators.LinearOperator`` —
-structured backends (`KroneckerOperator`, `ToeplitzOperator`,
-`StencilOperator`, ...) reach N >> 10^4 without materializing A:
-
-    slogdet(KroneckerOperator(a, b), method="slq")
-
-An operator input carries its own distribution/structure, so ``mesh`` is
-rejected for it (shard the dense input instead, or use `ShardedOperator`).
-
-Choosing: exact condensation is the right call when you need all digits, a
-sign, or N is small enough for O(N^3) (<~ 4k on one device); the estimators
-when A is huge, implicit, or stacked and ~2-3 significant digits suffice.
-Accuracy knobs: ``num_probes`` shrinks Monte-Carlo noise like 1/sqrt(k)
-(tracked — `repro.estimators.estimate_logdet` returns the standard error);
-``degree``/``num_steps`` shrink the spectral truncation bias geometrically
-at a matvec apiece, with rate degrading as cond(A) grows.  Estimator sign
-is always +1 (SPD assumption).
-
-``logdet_batched(stack)`` maps any of mc/chebyshev/slq over a (B, N, N)
-stack of SPD matrices in one vectorized call (GMM covariance workloads).
-
-Differentiation: every method supports ``jax.grad`` (training on
-log-likelihoods — the paper's motivating workload; see
-examples/gmm_fit.py).  Exact methods use the analytic pullback
-``d logdet/dA = A^{-T}`` (one dense inverse in the backward pass, same
-O(N^3) class as the forward — the pivot control flow is never
-differentiated).  Estimator methods stay matrix-free in the backward pass
-too: the cotangent is the Hutchinson estimate ``(1/k) sum_c (A^{-T} z_c)
-z_c^T`` on the SAME probes as the forward, realized by one batched
-`cg_solve` — cost ~ one CG solve per probe set, no dense inverse — and
-structured operators (Kronecker/Toeplitz/stencil) receive cotangents
-shaped like their parameters, not dense (N, N) tangents.  See
-`repro.estimators.grad`.
+`pad_to_multiple` is not deprecated — it is the shared embedding primitive
+(``A -> diag(A, I)``, determinant-preserving) that plans and the parallel
+kernels both use.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
+import warnings
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import blocked as _blocked
-from repro.core import condense as _condense
-from repro.core import gaussian as _gaussian
-from repro.core import parallel as _parallel
-from repro.core import scalapack as _scalapack
+from repro.core.configs import (
+    ESTIMATOR_METHODS as _EST_METHODS, METHODS, PARALLEL_METHODS,
+)
 
 __all__ = ["slogdet", "logdet", "logdet_batched", "pad_to_multiple",
            "METHODS"]
 
-METHODS = ("mc", "mc_staged", "mc_blocked", "ge",
-           "pmc", "pmc_blocked", "pge", "plu",
-           "chebyshev", "slq")
-
-_PARALLEL = {"pmc", "pmc_blocked", "pge", "plu"}
-# mirrors repro.estimators.ESTIMATOR_METHODS (kept literal here so importing
-# repro.core stays light — the estimators package is imported lazily)
-_ESTIMATOR = {"chebyshev", "slq"}
+_PARALLEL = set(PARALLEL_METHODS)
+_ESTIMATOR = set(_EST_METHODS)
 
 
 def pad_to_multiple(a: jax.Array, mult: int) -> jax.Array:
@@ -92,59 +47,47 @@ def pad_to_multiple(a: jax.Array, mult: int) -> jax.Array:
     out = jnp.zeros((n + pad, n + pad), a.dtype)
     out = out.at[:n, :n].set(a)
     idx = jnp.arange(n, n + pad)
-    return out.at[idx, idx].set(1.0)
+    # identity padding in the INPUT dtype: a Python 1.0 would weakly
+    # promote integer / low-precision inputs (int32 -> f32, bf16 -> f32)
+    return out.at[idx, idx].set(jnp.ones((), a.dtype))
 
 
-@functools.lru_cache(maxsize=64)
-def _parallel_fn(method: str, mesh, axis_name: str, k: int, nb: int):
-    if method == "pmc":
-        return _parallel.parallel_slogdet_mc(mesh, axis_name)
-    if method == "pmc_blocked":
-        return _blocked.parallel_slogdet_mc_blocked(mesh, axis_name, k=k)
-    if method == "pge":
-        return _gaussian.parallel_slogdet_ge(mesh, axis_name)
-    if method == "plu":
-        return _scalapack.parallel_slogdet_lu(mesh, axis_name, nb=nb)
-    raise ValueError(method)
+def _warn_deprecated(name: str, repl: str):
+    warnings.warn(
+        f"repro.core.{name}() is deprecated: build a plan once with "
+        f"repro.plan({repl}) and call it (docs/api.md has the migration "
+        f"guide)", DeprecationWarning, stacklevel=3)
 
 
-def _estimator_slogdet(a, method: str, mesh, axis_name: str, **est_kw):
-    from repro import estimators as _est
+def _runtime_bounds(est_kw: dict) -> dict:
+    """Pop traced lmin/lmax out of the config keywords.
 
-    if mesh is not None:
-        p = int(mesh.shape[axis_name])
-        padded = pad_to_multiple(a, p)
-        if padded is not a:
-            # diag(A, I): unit eigenvalues, logdet += 0 — but user-supplied
-            # Chebyshev bounds must be widened to bracket 1, else T_j blows
-            # up outside [-1, 1] on the padded directions.
-            if est_kw.get("lmin") is not None:
-                est_kw["lmin"] = min(float(est_kw["lmin"]), 1.0)
-            if est_kw.get("lmax") is not None:
-                est_kw["lmax"] = max(float(est_kw["lmax"]), 1.0)
-        a = _est.ShardedOperator(padded, mesh, axis_name)
-    res = _est.estimate_logdet(a, method=method, **est_kw)
-    return jnp.ones((), res.est.dtype), res.est
+    Typed configs are static and hashable (they key the plan cache), so
+    bounds that arrive as tracers (callers computing them under jit/grad)
+    ride as execution inputs instead — same numerics as the pre-plan API,
+    which threaded array kwargs through the custom VJP explicitly."""
+    rt = {}
+    for name in ("lmin", "lmax"):
+        v = est_kw.get(name)
+        try:
+            traced = isinstance(v, jax.core.Tracer)
+        except AttributeError:  # pragma: no cover - future jax relocations
+            traced = False
+        if traced:
+            rt[name] = est_kw.pop(name)
+    return rt
 
 
-def slogdet(a, *, method: str = "mc", mesh=None, axis_name: str = "rows",
-            k: int = 32, nb: int = 1, **est_kw):
-    """Sign and log|det| of a square matrix. numpy.linalg.slogdet semantics.
+def _plan_call(a, method, mesh, axis_name, k, nb, est_kw):
+    """Route one legacy call through a cached plan, preserving the string
+    API's validation order and error messages."""
+    from repro.core.plan import plan as _make_plan
 
-    Estimator methods ("chebyshev", "slq") assume SPD input, return sign 1,
-    and accept the keywords of `repro.estimators.logdet_chebyshev` /
-    `logdet_slq` (``num_probes``, ``degree`` / ``num_steps``, ``seed``,
-    ``lmin``/``lmax``, ...).  Exact methods reject estimator keywords.
-
-    All methods are ``jax.grad``-safe through the logdet output (custom
-    VJPs — see the module docstring and `repro.estimators.grad`); the sign
-    output is piecewise constant and carries zero gradient.
-    """
     if method not in METHODS:
         raise ValueError(f"unknown method {method!r}; choose from {METHODS}")
     from repro.estimators.operators import is_operator as _is_op
     if _is_op(a):
-        # implicit operator: only the matrix-free estimator methods apply
+        # operator inputs: only the matrix-free estimator methods apply
         if method not in _ESTIMATOR:
             raise TypeError(
                 f"method {method!r} needs a materialized matrix; operator "
@@ -152,58 +95,95 @@ def slogdet(a, *, method: str = "mc", mesh=None, axis_name: str = "rows",
         if mesh is not None:
             raise TypeError("operator inputs carry their own distribution; "
                             "mesh is only accepted for dense array inputs")
-        from repro import estimators as _est
-        res = _est.estimate_logdet(a, method=method, **est_kw)
-        return jnp.ones((), res.est.dtype), res.est
+        key = est_kw.pop("key", None)
+        probes = est_kw.pop("probes", None)
+        rt = _runtime_bounds(est_kw)
+        p = _make_plan(a, method=method, validate=False, **est_kw)
+        return p.slogdet(a, key=key, probes=probes, **rt)
+
     a_arr = a if isinstance(a, jax.Array) else jnp.asarray(a)
     shape = tuple(a_arr.shape)
     if len(shape) != 2 or shape[0] != shape[1]:
         raise ValueError(f"expected square matrix, got {shape}")
 
     if method in _ESTIMATOR:
-        return _estimator_slogdet(a_arr, method, mesh, axis_name, **est_kw)
-    if est_kw:
-        raise TypeError(f"method {method!r} takes no estimator keywords: "
-                        f"{sorted(est_kw)}")
-    a = a_arr
+        key = est_kw.pop("key", None)
+        probes = est_kw.pop("probes", None)
+        rt = _runtime_bounds(est_kw)
+        p = _make_plan(a_arr, method=method, mesh=mesh,
+                       axis_name=axis_name, validate=False, **est_kw)
+        return p.slogdet(a_arr, key=key, probes=probes, **rt)
 
-    # Exact methods share one analytic VJP (bar_a = g * inv(a).T) applied at
-    # the ORIGINAL matrix — padding/permutation happen inside the wrapped
-    # computation and are never differentiated through, and neither is the
-    # pivot control flow.  Forward behavior is unchanged outside jax.grad.
-    from repro.estimators.grad import exact_slogdet_vjp as _exact_vjp
-
-    if method in _PARALLEL:
-        if mesh is None:
-            raise ValueError(f"method {method!r} requires a mesh")
-        p = int(mesh.shape[axis_name])
-        mult = int(np.lcm(p, nb)) if method == "plu" else p
-        fn = _parallel_fn(method, mesh, axis_name, k, nb)
-        return _exact_vjp(lambda x: fn(pad_to_multiple(x, mult)))(a)
-
-    if method == "mc":
-        return _exact_vjp(_condense.slogdet_condense)(a)
-    if method == "mc_staged":
-        return _exact_vjp(_condense.slogdet_condense_staged)(a)
-    if method == "mc_blocked":
-        return _exact_vjp(
-            lambda x: _blocked.slogdet_condense_blocked(
-                pad_to_multiple(x, k), k=k))(a)
-    if method == "ge":
-        return _exact_vjp(_gaussian.slogdet_ge)(a)
-    raise AssertionError
+    kw = {"k": k, "nb": nb} if method in _PARALLEL or method == "mc_blocked" \
+        else {}
+    kw.update(est_kw)          # exact + estimator kwargs -> typed TypeError
+    p = _make_plan(a_arr, method=method, mesh=mesh, axis_name=axis_name,
+                      validate=False, **kw)
+    return p.slogdet(a_arr)
 
 
-def logdet(a, **kw):
-    """log|det(a)| — the paper's quantity (sign discarded)."""
-    return slogdet(a, **kw)[1]
+def slogdet(a, *, method: str = "mc", mesh=None, axis_name: str = "rows",
+            k: int = 32, nb: int = 1, **est_kw):
+    """Sign and log|det| of a square matrix. numpy.linalg.slogdet semantics.
+
+    .. deprecated:: use ``repro.plan(...)`` — this shim builds a cached
+       plan per (shape, method, config, mesh) and executes it.
+
+    Estimator methods ("chebyshev", "slq") assume SPD input, return sign 1,
+    and accept the keywords of `ChebyshevConfig` / `SLQConfig` plus the
+    runtime ``key``/``probes`` arrays.  Exact methods reject estimator
+    keywords.  All methods are ``jax.grad``-safe through the logdet output.
+    """
+    _warn_deprecated("slogdet", "shape, method=...")
+    return _plan_call(a, method, mesh, axis_name, k, nb, est_kw)
+
+
+def logdet(a, *, method: str = "mc", mesh=None, axis_name: str = "rows",
+           k: int = 32, nb: int = 1, **est_kw):
+    """log|det(a)| — the paper's quantity (sign discarded).
+
+    .. deprecated:: use ``repro.plan(...).logdet(a)``.
+    """
+    _warn_deprecated("logdet", "shape, method=...")
+    return _plan_call(a, method, mesh, axis_name, k, nb, est_kw)[1]
 
 
 def logdet_batched(stack, *, method: str = "chebyshev", **kw):
     """``log|det|`` per matrix of an SPD (B, N, N) stack -> (B,).
 
-    See `repro.estimators.logdet_batched` (re-exported here as the public
-    entry point next to `slogdet`).
+    .. deprecated:: use ``repro.plan(stack.shape, method=...)`` — a batched
+       plan returns a `LogdetResult` whose fields carry the leading batch
+       axis.
     """
-    from repro import estimators as _est
-    return _est.logdet_batched(stack, method=method, **kw)
+    _warn_deprecated("logdet_batched", "(B, n, n), method=...")
+    from repro.core.plan import plan as _make_plan
+    from repro.estimators import ESTIMATOR_METHODS as _est_names
+    from repro.estimators.operators import is_operator as _is_op
+
+    if _is_op(stack):
+        if getattr(stack, "batch", None) is None:
+            raise ValueError(
+                "logdet_batched needs a batched operator (with a .batch "
+                "axis); use estimate_logdet for a single operator")
+        if method == "mc":
+            raise TypeError(
+                "method 'mc' needs a materialized (B, n, n) stack; "
+                "operator inputs require an estimator method "
+                f"{_est_names}")
+        key = kw.pop("key", None)
+        probes = kw.pop("probes", None)
+        p = _make_plan(stack, method=method, validate=False, **kw)
+        return p.logdet(stack, key=key, probes=probes)
+
+    stack = jnp.asarray(stack)
+    if stack.ndim != 3 or stack.shape[1] != stack.shape[2]:
+        raise ValueError(f"expected (B, n, n) stack, got {stack.shape}")
+    if method == "mc":
+        if kw:
+            raise TypeError(f"method 'mc' takes no estimator keywords: {kw}")
+        p = _make_plan(stack, method="mc", validate=False)
+        return p.logdet(stack)
+    key = kw.pop("key", None)
+    probes = kw.pop("probes", None)
+    p = _make_plan(stack, method=method, validate=False, **kw)
+    return p.logdet(stack, key=key, probes=probes)

@@ -1,0 +1,227 @@
+"""Typed per-method configuration for the plan API.
+
+Each log-determinant method family gets one frozen dataclass holding every
+knob it understands, validated at construction — replacing the flat
+``**kwargs`` namespace the string API used to thread through dispatch.  A
+config is hashable (all fields are static Python values), so it can key
+the plan cache: two ``repro.plan`` calls with equal specs and equal
+configs share one compiled executable.
+
+Runtime *arrays* — PRNG ``key``, pre-drawn ``probes``, traced spectral
+bounds — are deliberately NOT config fields: they are execution inputs,
+passed to the plan call itself, so changing them never invalidates a
+compiled plan.
+
+  ExactConfig      mc / mc_staged / mc_blocked / ge / pmc / pmc_blocked /
+                   pge / plu — panel width ``k``, block-cyclic tile ``nb``
+  ChebyshevConfig  stochastic Chebyshev (Han et al.): degree, probe budget,
+                   optional spectral bounds, backward-CG knobs
+  SLQConfig        stochastic Lanczos quadrature (Ubaru et al.): Lanczos
+                   steps, probe budget, backward-CG knobs
+
+`config_for` maps legacy keyword soup onto the right dataclass and is the
+single place the shim layer (`repro.core.api`) translates old calls.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Union
+
+__all__ = [
+    "ExactConfig", "ChebyshevConfig", "SLQConfig", "LogdetConfig",
+    "config_for", "EXACT_METHODS", "ESTIMATOR_METHODS", "PARALLEL_METHODS",
+    "METHODS",
+]
+
+EXACT_METHODS = ("mc", "mc_staged", "mc_blocked", "ge",
+                 "pmc", "pmc_blocked", "pge", "plu")
+PARALLEL_METHODS = ("pmc", "pmc_blocked", "pge", "plu")
+ESTIMATOR_METHODS = ("chebyshev", "slq")
+METHODS = EXACT_METHODS + ESTIMATOR_METHODS
+
+# every keyword the estimator family understands — used to phrase the
+# "exact method got estimator keywords" error precisely
+_ESTIMATOR_KW = frozenset({
+    "num_probes", "degree", "num_steps", "seed", "lmin", "lmax",
+    "probe_kind", "grad_cg_tol", "grad_cg_maxiter", "key", "probes",
+})
+
+
+def _require(cond: bool, msg: str):
+    if not cond:
+        raise ValueError(msg)
+
+
+@dataclass(frozen=True)
+class ExactConfig:
+    """Knobs of the exact O(N^3) condensation / elimination family.
+
+    ``k``  — panel width of the blocked methods (mc_blocked, pmc_blocked).
+    ``nb`` — block-cyclic tile size of the ScaLAPACK-style LU (plu).
+    Methods that do not use a knob ignore it; both must be positive so one
+    config can serve any exact method.
+    """
+    k: int = 32
+    nb: int = 1
+
+    def __post_init__(self):
+        _require(int(self.k) >= 1, f"k must be >= 1, got {self.k}")
+        _require(int(self.nb) >= 1, f"nb must be >= 1, got {self.nb}")
+
+
+@dataclass(frozen=True)
+class ChebyshevConfig:
+    """Knobs of the stochastic Chebyshev estimator (SPD input).
+
+    ``degree``       expansion degree — truncation bias decays ~rho^-degree
+    ``num_probes``   Hutchinson probes — noise shrinks ~1/sqrt(num_probes)
+    ``probe_kind``   "rademacher" (variance-minimizing) or "gaussian"
+    ``seed``         default PRNG seed when no key is passed at call time
+    ``lmin``/``lmax`` spectral bounds; None -> power-iteration bracket
+    ``grad_cg_tol``/``grad_cg_maxiter`` backward-pass CG solve control
+    """
+    degree: int = 64
+    num_probes: int = 32
+    probe_kind: str = "rademacher"
+    seed: int = 0
+    lmin: Optional[float] = None
+    lmax: Optional[float] = None
+    grad_cg_tol: float = 1e-8
+    grad_cg_maxiter: Optional[int] = None
+
+    def __post_init__(self):
+        _require(int(self.degree) >= 1,
+                 f"degree must be >= 1, got {self.degree}")
+        _require(int(self.num_probes) >= 1,
+                 f"num_probes must be >= 1, got {self.num_probes}")
+        _require(self.probe_kind in ("rademacher", "gaussian"),
+                 f"unknown probe_kind {self.probe_kind!r}")
+        for name in ("lmin", "lmax"):
+            v = getattr(self, name)
+            if v is None:
+                continue
+            try:
+                # coerce 0-d arrays / np scalars to a hashable float —
+                # configs key the plan cache
+                object.__setattr__(self, name, float(v))
+            except Exception:
+                # traced bounds cannot be static config: they are
+                # execution inputs — plan_(a, lmin=..., lmax=...)
+                raise TypeError(
+                    f"{name} in the config must be a static scalar; pass "
+                    f"traced bounds at execution time instead "
+                    f"(plan(a, {name}=...))") from None
+        if self.lmin is not None and self.lmax is not None:
+            _require(float(self.lmax) > float(self.lmin),
+                     f"need lmax > lmin, got [{self.lmin}, {self.lmax}]")
+
+    def estimator_kwargs(self) -> dict:
+        """Keywords for `repro.estimators.estimate_logdet`."""
+        kw = dict(degree=self.degree, num_probes=self.num_probes,
+                  probe_kind=self.probe_kind, seed=self.seed,
+                  grad_cg_tol=self.grad_cg_tol,
+                  grad_cg_maxiter=self.grad_cg_maxiter)
+        if self.lmin is not None:
+            kw["lmin"] = self.lmin
+        if self.lmax is not None:
+            kw["lmax"] = self.lmax
+        return kw
+
+
+@dataclass(frozen=True)
+class SLQConfig:
+    """Knobs of the stochastic Lanczos quadrature estimator (SPD input).
+
+    ``num_steps``    Lanczos steps — quadrature error ~exp(-4m/sqrt(cond))
+    ``num_probes``   Hutchinson probes — noise shrinks ~1/sqrt(num_probes)
+    ``seed``         default PRNG seed when no key is passed at call time
+    ``grad_cg_tol``/``grad_cg_maxiter`` backward-pass CG solve control
+    """
+    num_steps: int = 25
+    num_probes: int = 32
+    seed: int = 0
+    grad_cg_tol: float = 1e-8
+    grad_cg_maxiter: Optional[int] = None
+
+    def __post_init__(self):
+        _require(int(self.num_steps) >= 1,
+                 f"num_steps must be >= 1, got {self.num_steps}")
+        _require(int(self.num_probes) >= 1,
+                 f"num_probes must be >= 1, got {self.num_probes}")
+
+    def estimator_kwargs(self) -> dict:
+        """Keywords for `repro.estimators.estimate_logdet`."""
+        return dict(num_steps=self.num_steps, num_probes=self.num_probes,
+                    seed=self.seed, grad_cg_tol=self.grad_cg_tol,
+                    grad_cg_maxiter=self.grad_cg_maxiter)
+
+
+LogdetConfig = Union[ExactConfig, ChebyshevConfig, SLQConfig]
+
+_CONFIG_CLS = {
+    **{m: ExactConfig for m in EXACT_METHODS},
+    "chebyshev": ChebyshevConfig,
+    "slq": SLQConfig,
+}
+
+
+def config_cls_for(method: str):
+    """The config dataclass governing ``method`` (ValueError if unknown)."""
+    try:
+        return _CONFIG_CLS[method]
+    except KeyError:
+        raise ValueError(
+            f"unknown method {method!r}; choose from {METHODS}") from None
+
+
+def config_for(method: str, kwargs: dict) -> LogdetConfig:
+    """Build the typed config for ``method`` from legacy-style keywords.
+
+    Exact methods reject estimator keywords with a TypeError (matching the
+    historical string-API behavior); every family rejects keywords it does
+    not define, by name, so typos fail loudly instead of being swallowed
+    by a ``**kwargs`` sink.
+    """
+    cls = config_cls_for(method)
+    names = {f.name for f in dataclasses.fields(cls)}
+    extra = set(kwargs) - names
+    if extra:
+        if cls is ExactConfig and extra & _ESTIMATOR_KW:
+            raise TypeError(f"method {method!r} takes no estimator "
+                            f"keywords: {sorted(extra)}")
+        raise TypeError(
+            f"unknown keywords for method {method!r}: {sorted(extra)} "
+            f"(valid: {sorted(names)})")
+    return cls(**kwargs)
+
+
+def filter_for_method(method: str, kwargs: dict) -> dict:
+    """Keep the keywords the resolved method's family understands.
+
+    Used by ``method="auto"``: the caller cannot know the family in
+    advance, so knobs for the *other* family are dropped (passing
+    ``num_probes`` must not crash a call the cost model resolved to exact
+    condensation — exact is at least as accurate).  Keywords no family
+    defines still raise, so typos fail loudly.
+    """
+    known = set().union(*({f.name for f in dataclasses.fields(c)}
+                          for c in (ExactConfig, ChebyshevConfig,
+                                    SLQConfig)))
+    unknown = set(kwargs) - known
+    if unknown:
+        raise TypeError(
+            f"unknown keywords: {sorted(unknown)} (no method understands "
+            f"them; valid names: {sorted(known)})")
+    names = {f.name for f in dataclasses.fields(config_cls_for(method))}
+    return {k: v for k, v in kwargs.items() if k in names}
+
+
+def validate_config(method: str, config: LogdetConfig) -> LogdetConfig:
+    """Check that an explicit config instance matches ``method``'s family."""
+    cls = config_cls_for(method)
+    if not isinstance(config, cls):
+        raise TypeError(
+            f"method {method!r} needs a {cls.__name__}, "
+            f"got {type(config).__name__}")
+    return config

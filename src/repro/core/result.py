@@ -1,0 +1,75 @@
+"""The unified result type every log-determinant path returns.
+
+Before the plan API, each path returned its own shape: exact methods a
+``(sign, logabsdet)`` pair, estimators a `TraceEstimate`, batched calls a
+bare array.  `LogdetResult` unifies them — one container carrying the
+value, its Monte-Carlo uncertainty (exactly zero for exact methods), the
+method the plan actually ran (which matters when ``method="auto"``
+resolved it), and execution diagnostics.
+
+``sign`` and ``logabsdet`` follow ``numpy.linalg.slogdet`` semantics, with
+a leading batch axis for stack plans.  Tuple unpacking is supported for
+drop-in migration from the old pair return::
+
+    sign, logabsdet = plan(a)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+
+__all__ = ["LogdetResult", "Diagnostics"]
+
+
+@dataclass(frozen=True)
+class Diagnostics:
+    """Where the time went and what the plan actually executed.
+
+    ``matvec_cols``   operator matvec *columns* the forward pass consumes
+                      (probes x polynomial/Lanczos steps, plus the power-
+                      iteration bounds bracket) — the estimator cost unit;
+                      None for exact methods, whose cost is ``flops_est``.
+    ``flops_est``     dense-equivalent FLOP estimate of the path (the
+                      number the auto-selector compared against).
+    ``cg_iters``      inner CG iterations of the most recent gradient
+                      pullback through this plan; None until a
+                      ``value_and_grad`` execution runs one.
+    ``wall_time_s``   host-side wall time of this execution, including
+                      device sync; None when the plan ran under a trace
+                      (inside jit/grad/vmap, where timing is meaningless).
+    ``padded_n``      problem size after `pad_to_multiple` embedding
+                      (== n when no padding was needed).
+    ``device_count``  devices the execution spanned (mesh size, else 1).
+    """
+    matvec_cols: Optional[int] = None
+    flops_est: Optional[float] = None
+    cg_iters: Optional[int] = None
+    wall_time_s: Optional[float] = None
+    padded_n: Optional[int] = None
+    device_count: int = 1
+
+
+@dataclass(frozen=True)
+class LogdetResult:
+    """Sign, log|det|, uncertainty and provenance of one plan execution.
+
+    ``sem`` is the standard error of the Monte-Carlo mean for estimator
+    methods and exactly zero for exact methods — always present, so
+    downstream code can treat every path uniformly (``est +- sem``).
+    """
+    sign: jax.Array
+    logabsdet: jax.Array
+    sem: jax.Array
+    method_used: str
+    diagnostics: Diagnostics
+
+    def __iter__(self):
+        """Unpack like the legacy pair: ``sign, logabsdet = result``."""
+        return iter((self.sign, self.logabsdet))
+
+    def __repr__(self):  # compact: arrays render as scalars for 0-d
+        return (f"LogdetResult(sign={self.sign}, "
+                f"logabsdet={self.logabsdet}, sem={self.sem}, "
+                f"method_used={self.method_used!r})")

@@ -36,25 +36,28 @@ from repro.estimators.hutchinson import (
 )
 from repro.estimators.operators import (
     BatchedOperator, CGResult, DenseOperator, KroneckerOperator,
-    LinearOperator, ShardedOperator, StencilOperator, ToeplitzOperator,
-    as_operator, cg_solve, is_operator, rowwise_matvec_specs,
+    LinearOperator, PlanHints, ShardedOperator, StencilOperator,
+    ToeplitzOperator, as_operator, cg_solve, is_operator,
+    rowwise_matvec_specs,
 )
 from repro.estimators.slq import lanczos, logdet_slq
 from repro.estimators.grad import (
     ESTIMATOR_METHODS, estimate_logdet, exact_slogdet_vjp,
-    operator_grad_info, register_operator_grad,
+    hutchinson_pullback, operator_grad_info, register_operator_grad,
+    shared_probes,
 )
 
 __all__ = [
     "TraceEstimate", "hutchinson_trace", "make_probes", "mean_sem",
     "logdet_chebyshev", "chebyshev_coeffs_log", "spectral_bounds",
     "logdet_slq", "lanczos",
-    "LinearOperator", "DenseOperator", "BatchedOperator", "ShardedOperator",
-    "KroneckerOperator", "ToeplitzOperator", "StencilOperator",
-    "as_operator", "is_operator", "rowwise_matvec_specs",
+    "LinearOperator", "PlanHints", "DenseOperator", "BatchedOperator",
+    "ShardedOperator", "KroneckerOperator", "ToeplitzOperator",
+    "StencilOperator", "as_operator", "is_operator", "rowwise_matvec_specs",
     "CGResult", "cg_solve",
     "ESTIMATOR_METHODS", "estimate_logdet", "logdet_batched",
-    "exact_slogdet_vjp", "register_operator_grad", "operator_grad_info",
+    "exact_slogdet_vjp", "hutchinson_pullback", "shared_probes",
+    "register_operator_grad", "operator_grad_info",
 ]
 
 

@@ -65,7 +65,8 @@ from repro.estimators.slq import logdet_slq
 from repro.kernels.ref import stencil_mv_ref
 
 __all__ = [
-    "estimate_logdet", "exact_slogdet_vjp",
+    "estimate_logdet", "exact_slogdet_vjp", "hutchinson_pullback",
+    "shared_probes",
     "register_operator_grad", "operator_grad_info", "OperatorGradInfo",
 ]
 
@@ -190,7 +191,7 @@ def exact_slogdet_vjp(fn: Callable[[jax.Array], Any]):
 # estimator methods: Hutchinson pullback on the forward's own probes
 # --------------------------------------------------------------------------
 
-def _shared_probes(method: str, op, key, kw):
+def shared_probes(method: str, op, key, kw):
     """The exact probe slab the named estimator would draw internally.
 
     Mirrors each estimator's key discipline (`logdet_chebyshev` splits the
@@ -208,6 +209,45 @@ def _shared_probes(method: str, op, key, kw):
         kp, kind = key, "rademacher"
     return make_probes(kp, n, num, kind=kind, dtype=op.dtype,
                        batch_shape=(batch,) if batch else ())
+
+
+def hutchinson_pullback(op, params, probes, g, *, info=None,
+                        cg_tol: float = 1e-8, cg_maxiter=None):
+    """The logdet cotangent on an operator's own parameters, matrix-free.
+
+    Realizes ``bar_params = vjp_params[(g/k) sum_c w_c^T A(params) z_c]``
+    with ``w = A^{-T} Z`` solved by one batched transposed CG on the probe
+    slab ``Z`` — the estimator backward pass, exposed as a plain function
+    so callers (the custom-VJP rule below, and `repro.plan`'s explicit
+    ``value_and_grad`` path) can also read the solve's convergence
+    evidence.  Returns ``(bar_params, CGResult)``.
+
+    ``op`` is the template operator (static attributes), ``params`` its
+    differentiable parameter pytree (may be traced), ``g`` the logdet
+    cotangent (scalar, or (B,) for batched operators).
+    """
+    info = operator_grad_info(op) if info is None else info
+    if info is None:
+        raise TypeError(
+            f"no grad registration for {type(op).__name__}; register one "
+            "with repro.estimators.register_operator_grad")
+    op_b = info.rebuild(op, params)
+    cg = cg_solve(op_b, probes, transpose=True, tol=cg_tol,
+                  maxiter=cg_maxiter)
+    w = cg.x                                         # A^{-T} Z, matrix-free
+    k = probes.shape[-1]
+    scale = (jnp.asarray(g) / k).astype(probes.dtype)
+    if info.dense:
+        bar = scale[..., None, None] * jnp.einsum("...ik,...jk->...ij",
+                                                  w, probes)
+    else:
+        w2 = scale[..., None, None] * w
+        apply_fn = info.apply or (
+            lambda o, pp, zz: info.rebuild(o, pp).mm(zz))
+        _, pull = jax.vjp(
+            lambda pp: (w2 * apply_fn(op, pp, probes)).sum(), params)
+        (bar,) = pull(jnp.ones((), w2.dtype))
+    return bar, cg
 
 
 def _zero_cotangent(x):
@@ -252,7 +292,7 @@ def estimate_logdet(a, method: str = "chebyshev", **kw) -> TraceEstimate:
         key = jax.random.PRNGKey(seed)
     probes = kw.pop("probes", None)
     if probes is None:
-        probes = _shared_probes(method, op, key, kw)
+        probes = shared_probes(method, op, key, kw)
     else:
         probes = jnp.asarray(probes, op.dtype)
 
@@ -279,23 +319,9 @@ def estimate_logdet(a, method: str = "chebyshev", **kw) -> TraceEstimate:
 
     def f_bwd(res, ct):
         p, arrs = res
-        z = arrs["probes"]
-        g = ct.est                                   # (...,) logdet cotangent
-        op_b = info.rebuild(op, p)
-        w = cg_solve(op_b, z, transpose=True, tol=cg_tol,
-                     maxiter=cg_maxiter).x           # A^{-T} Z, matrix-free
-        k = z.shape[-1]
-        scale = (g / k).astype(z.dtype)
-        if info.dense:
-            bar = scale[..., None, None] * jnp.einsum("...ik,...jk->...ij",
-                                                      w, z)
-        else:
-            w2 = scale[..., None, None] * w
-            apply_fn = info.apply or (
-                lambda o, pp, zz: info.rebuild(o, pp).mm(zz))
-            _, pull = jax.vjp(
-                lambda pp: (w2 * apply_fn(op, pp, z)).sum(), p)
-            (bar,) = pull(jnp.ones((), w2.dtype))
+        bar, _ = hutchinson_pullback(op, p, arrs["probes"], ct.est,
+                                     info=info, cg_tol=cg_tol,
+                                     cg_maxiter=cg_maxiter)
         zeros = jax.tree_util.tree_map(_zero_cotangent, arrs)
         return bar, zeros
 

@@ -21,7 +21,9 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.estimators.operators.base import LinearOperator, is_operator
+from repro.estimators.operators.base import (
+    LinearOperator, PlanHints, is_operator,
+)
 from repro.estimators.operators.batched import BatchedOperator
 from repro.estimators.operators.dense import DenseOperator
 from repro.estimators.operators.kron import KroneckerOperator
@@ -32,9 +34,9 @@ from repro.estimators.operators.stencil import StencilOperator
 from repro.estimators.operators.toeplitz import ToeplitzOperator
 
 __all__ = [
-    "LinearOperator", "DenseOperator", "BatchedOperator", "ShardedOperator",
-    "KroneckerOperator", "ToeplitzOperator", "StencilOperator",
-    "as_operator", "is_operator", "rowwise_matvec_specs",
+    "LinearOperator", "PlanHints", "DenseOperator", "BatchedOperator",
+    "ShardedOperator", "KroneckerOperator", "ToeplitzOperator",
+    "StencilOperator", "as_operator", "is_operator", "rowwise_matvec_specs",
     "CGResult", "cg_solve",
 ]
 

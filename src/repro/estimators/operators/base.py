@@ -29,12 +29,35 @@ additionally exposes ``batch`` and takes slabs with a leading batch axis
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["LinearOperator", "is_operator"]
+__all__ = ["LinearOperator", "PlanHints", "is_operator"]
+
+
+class PlanHints(NamedTuple):
+    """What an operator tells the plan-time cost model (`repro.plan`).
+
+    ``structure``        short tag ("dense", "kron", "toeplitz", ...) used
+                         in diagnostics and the method decision tree
+    ``matvec_flops``     FLOPs one matvec column costs through this backend
+                         — the unit the estimator cost model multiplies by
+                         its probe x step budget
+    ``materializable``   True when `to_dense` is a cheap O(n^2) read (the
+                         matrix already exists in memory — dense entries,
+                         sharded rows); False for implicit backends.
+                         Advisory: operator inputs always route to the
+                         matrix-free estimator family (exact methods take
+                         the array itself, not an operator), but the flag
+                         feeds cost accounting and diagnostics
+    ``device_count``     devices a matvec spans (mesh size, else 1)
+    """
+    structure: str
+    matvec_flops: float
+    materializable: bool = False
+    device_count: int = 1
 
 
 class LinearOperator:
@@ -77,6 +100,18 @@ class LinearOperator:
         """
         d = self.diag()
         return None if d is None else d.sum(-1)
+
+    def plan_hints(self) -> PlanHints:
+        """Cost-model advertisement for ``repro.plan(method="auto")``.
+
+        The default assumes an unstructured implicit operator: a dense-cost
+        matvec (2 n^2 FLOPs per column) that cannot be materialized, which
+        routes the auto-selector to the estimator family.  Backends with
+        real structure override this with their actual per-column cost.
+        """
+        n = self.shape[-1]
+        return PlanHints(structure="implicit", matvec_flops=2.0 * n * n,
+                         materializable=False)
 
     def to_dense(self) -> jax.Array:
         """Materialize as (n, n) — O(n) matvecs; testing / small-n only."""

@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.estimators.operators.base import LinearOperator
+from repro.estimators.operators.base import LinearOperator, PlanHints
 
 __all__ = ["BatchedOperator"]
 
@@ -47,3 +47,10 @@ class BatchedOperator(LinearOperator):
 
     def to_dense(self):
         return self.stack
+
+    def plan_hints(self):
+        # per-matrix dense cost; the stack is resident, so the exact path
+        # (vmapped condensation) is available below the crossover
+        n = self.shape[-1]
+        return PlanHints(structure="batched", matvec_flops=2.0 * n * n,
+                         materializable=True)

@@ -10,7 +10,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.estimators.operators.base import LinearOperator, check_square
+from repro.estimators.operators.base import (
+    LinearOperator, PlanHints, check_square,
+)
 
 __all__ = ["DenseOperator"]
 
@@ -45,3 +47,9 @@ class DenseOperator(LinearOperator):
 
     def to_dense(self):
         return self.a
+
+    def plan_hints(self):
+        # the matrix is already resident: exact O(n^3) methods are fair game
+        n = self.n
+        return PlanHints(structure="dense", matvec_flops=2.0 * n * n,
+                         materializable=True)

@@ -24,7 +24,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.estimators.operators.base import LinearOperator, check_square
+from repro.estimators.operators.base import (
+    LinearOperator, PlanHints, check_square,
+)
 
 __all__ = ["KroneckerOperator"]
 
@@ -71,3 +73,9 @@ class KroneckerOperator(LinearOperator):
 
     def to_dense(self):
         return jnp.kron(self.a, self.b)
+
+    def plan_hints(self):
+        # two reshaped GEMMs: O(n (na + nb)) per column, never materialized
+        return PlanHints(structure="kron",
+                         matvec_flops=2.0 * self.n * (self.na + self.nb),
+                         materializable=False)

@@ -17,7 +17,9 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec
 
 from repro._compat import shard_map as _shard_map
-from repro.estimators.operators.base import LinearOperator, check_square
+from repro.estimators.operators.base import (
+    LinearOperator, PlanHints, check_square,
+)
 
 __all__ = ["ShardedOperator", "rowwise_matvec_specs"]
 
@@ -90,3 +92,11 @@ class ShardedOperator(LinearOperator):
 
     def to_dense(self):
         return self.a
+
+    def plan_hints(self):
+        # dense cost split across the mesh; rows are resident (sharded), so
+        # the exact parallel condensation path stays available
+        n = self.n
+        p = int(self.mesh.shape[self.axis_name])
+        return PlanHints(structure="sharded", matvec_flops=2.0 * n * n / p,
+                         materializable=True, device_count=p)

@@ -23,7 +23,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.estimators.operators.base import LinearOperator
+from repro.estimators.operators.base import LinearOperator, PlanHints
 
 __all__ = ["StencilOperator"]
 
@@ -106,6 +106,12 @@ class StencilOperator(LinearOperator):
         if 0 in self.offsets:
             return self.bands[self.offsets.index(0)]
         return jnp.zeros((self.n,), self.dtype)
+
+    def plan_hints(self):
+        # banded contraction: 2 FLOPs per band entry per column
+        return PlanHints(structure="stencil",
+                         matvec_flops=2.0 * len(self.offsets) * self.n,
+                         materializable=False)
 
     def to_dense(self):
         n = self.n

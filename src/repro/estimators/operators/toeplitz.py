@@ -20,7 +20,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.estimators.operators.base import LinearOperator
+from repro.estimators.operators.base import LinearOperator, PlanHints
 
 __all__ = ["ToeplitzOperator"]
 
@@ -80,6 +80,14 @@ class ToeplitzOperator(LinearOperator):
 
     def trace_hint(self):
         return self.n * self.c[0].astype(self.dtype)
+
+    def plan_hints(self):
+        import numpy as _np
+        # three length-2n FFTs per column: ~ 15 n log2(n) real FLOPs
+        n = max(self.n, 2)
+        return PlanHints(structure="toeplitz",
+                         matvec_flops=15.0 * n * float(_np.log2(n)),
+                         materializable=False)
 
     def to_dense(self):
         i = jnp.arange(self.n)

@@ -1,0 +1,478 @@
+"""The plan/execute API: `repro.plan` -> `LogdetPlan` -> `LogdetResult`.
+
+This file is the deprecation gate's target: it exercises ONLY the new API
+(plus `pytest.warns`-guarded shim checks), so CI runs it with
+``-W error::DeprecationWarning`` to prove internal code never routes
+through the legacy string shims.
+
+Covers: typed config validation, the auto-selector's crossover (exact for
+small dense N, estimators for large N / implicit operators, mesh-aware),
+the unified `LogdetResult` across every path, the non-SPD screen, plan
+caching / no-retrace behavior, and diagnostics-rich gradients.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro
+from repro import (
+    ChebyshevConfig, ExactConfig, LogdetResult, SLQConfig, select_method,
+)
+from repro.estimators import StencilOperator, ToeplitzOperator
+
+
+def make_spd(n, seed, shift=2.0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, 2 * n))
+    return x @ x.T / (2 * n) + shift * np.eye(n)
+
+
+# ------------------------------------------------------------ typed configs
+
+def test_config_validation_rejects_bad_values():
+    with pytest.raises(ValueError, match="degree"):
+        ChebyshevConfig(degree=0)
+    with pytest.raises(ValueError, match="num_probes"):
+        SLQConfig(num_probes=0)
+    with pytest.raises(ValueError, match="lmax"):
+        ChebyshevConfig(lmin=4.0, lmax=1.0)
+    with pytest.raises(ValueError, match="k must be"):
+        ExactConfig(k=0)
+
+
+def test_plan_rejects_unknown_and_misfiled_kwargs():
+    with pytest.raises(TypeError, match="estimator keywords"):
+        repro.plan((8, 8), method="mc", num_probes=4)
+    with pytest.raises(TypeError, match="unknown keywords"):
+        repro.plan((8, 8), method="chebyshev", num_steps=10)
+    with pytest.raises(TypeError, match="unknown keywords"):
+        repro.plan((8, 8), method="slq", degree=16)
+    with pytest.raises(ValueError, match="unknown method"):
+        repro.plan((8, 8), method="cholesky")
+
+
+def test_plan_config_instance_must_match_method():
+    p = repro.plan((8, 8), method="slq", config=SLQConfig(num_steps=5))
+    assert p.config.num_steps == 5
+    with pytest.raises(TypeError, match="SLQConfig"):
+        repro.plan((8, 8), method="slq", config=ChebyshevConfig())
+    with pytest.raises(TypeError, match="not both"):
+        repro.plan((8, 8), method="slq", config=SLQConfig(), num_probes=4)
+    with pytest.raises(ValueError, match="ambiguous"):
+        repro.plan((8, 8), method="auto", config=SLQConfig())
+
+
+# ------------------------------------------------------------- auto select
+
+def test_auto_picks_exact_below_crossover():
+    assert select_method((64, 64)) == "mc_staged"
+    assert select_method((512, 512)) == "mc_staged"
+    # batched small stacks: vmapped exact condensation
+    assert select_method((8, 64, 64)) == "mc"
+
+
+def test_auto_picks_estimator_above_crossover():
+    assert select_method((8192, 8192)) == "slq"
+    assert select_method((4, 8192, 8192)) == "slq"
+    # known spectral bounds unlock the cheaper Chebyshev path
+    assert select_method((8192, 8192), bounds_known=True) == "chebyshev"
+
+
+def test_auto_picks_estimator_for_implicit_operators():
+    # structure makes the matvec cheap AND the matrix unmaterializable:
+    # estimators are the only family, at any size
+    op = ToeplitzOperator(jnp.asarray(np.r_[2.5, 0.5 ** np.arange(1, 64)]))
+    assert select_method(op) == "slq"
+    st = StencilOperator((-1, 0, 1), jnp.asarray([-1.0, 2.5, -1.0]), n=64)
+    assert select_method(st) == "slq"
+
+
+def test_auto_on_materializable_operator_stays_matrix_free():
+    """Dense/sharded OPERATORS advertise materializable=True, but exact
+    methods take arrays, not operators — auto must stay on estimators."""
+    from repro.estimators import DenseOperator
+    op = DenseOperator(jnp.asarray(make_spd(32, 0)))
+    assert op.plan_hints().materializable
+    assert select_method(op) == "slq"
+    p = repro.plan(op, method="auto", num_probes=16)
+    assert p.method == "slq"
+    assert jnp.isfinite(p().logabsdet)
+
+
+def test_batched_stack_rejects_mesh_up_front(mesh1):
+    stack = np.stack([make_spd(16, s) for s in range(2)])
+    for method in ("auto", "mc", "slq"):
+        with pytest.raises(TypeError, match="one device per matrix"):
+            repro.plan(stack, method=method, mesh=mesh1)
+
+
+def test_auto_drops_other_familys_kwargs():
+    # below the crossover auto resolves to exact: the estimator knobs are
+    # dropped rather than crashing the plan the selector picked
+    p = repro.plan((64, 64), method="auto", num_probes=16)
+    assert p.method == "mc_staged" and isinstance(p.config, ExactConfig)
+    # above the crossover the same knobs land in the estimator config
+    p2 = repro.plan((8192, 8192), method="auto", num_probes=16)
+    assert p2.method == "slq" and p2.config.num_probes == 16
+    # typos no family understands still fail loudly
+    with pytest.raises(TypeError, match="unknown keywords"):
+        repro.plan((64, 64), method="auto", num_probs=16)
+
+
+def test_auto_accuracy_demand_forces_exact():
+    # at rtol below the Monte-Carlo floor only exact methods qualify
+    assert select_method((8192, 8192), rtol=1e-8) == "mc_staged"
+    assert select_method((8192, 8192), rtol=1e-2) == "slq"
+
+
+def test_auto_mesh_shifts_choice_to_parallel(mesh1):
+    from repro._compat import make_mesh
+    # selector consults the device count: exact family -> parallel method
+    assert select_method((256, 256), mesh=mesh1) == "mc_staged"  # 1 device
+    # a hypothetical 8-way mesh cannot be built in-process here, but the
+    # spec-level device_count path is what the mesh feeds into
+    spec = repro.spec_of((256, 256))
+    import dataclasses
+    spec8 = dataclasses.replace(spec, device_count=8)
+    assert select_method(spec8) == "pmc"
+
+
+def test_auto_plan_resolves_and_executes():
+    a = make_spd(48, 0)
+    p = repro.plan(a, method="auto")
+    assert p.method == "mc_staged"          # resolved, never "auto"
+    res = p()
+    assert isinstance(res, LogdetResult)
+    assert res.method_used == "mc_staged"
+    np.testing.assert_allclose(float(res.logabsdet),
+                               np.linalg.slogdet(a)[1], rtol=1e-9)
+
+
+def test_auto_operator_plan_executes():
+    c = np.zeros(96)
+    c[0], c[1] = 2.5, -1.0
+    op = ToeplitzOperator(jnp.asarray(c))
+    p = repro.plan(op, method="auto", num_probes=32)
+    assert p.method == "slq"
+    res = p()
+    i = np.arange(96)
+    ref = np.linalg.slogdet(c[np.abs(i[:, None] - i[None, :])])[1]
+    assert abs(float(res.logabsdet) - ref) < 5 * float(res.sem) + 0.5
+
+
+def test_auto_routes_non_spd_to_clear_error():
+    n = 4096                                # above the crossover
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((n, n)) + n * np.eye(n)   # NOT symmetric
+    p = repro.plan((n, n), method="auto")
+    assert p.method in ("chebyshev", "slq")
+    with pytest.raises(ValueError, match="not symmetric"):
+        p(a)
+    bad_diag = -np.eye(n)                   # symmetric but indefinite
+    with pytest.raises(ValueError, match="positive-definite"):
+        p(bad_diag)
+
+
+def test_validate_false_skips_spd_screen():
+    a = make_spd(16, 0)
+    p = repro.plan((16, 16), method="slq", validate=False, num_probes=8)
+    assert jnp.isfinite(p(a).logabsdet)
+
+
+# --------------------------------------------------------- unified results
+
+@pytest.mark.parametrize("method,kw", [
+    ("mc", {}),
+    ("mc_staged", {}),
+    ("ge", {}),
+    ("chebyshev", dict(degree=48, num_probes=32)),
+    ("slq", dict(num_steps=20, num_probes=32)),
+])
+def test_every_path_returns_logdet_result(method, kw):
+    a = make_spd(96, 1)
+    ref = np.linalg.slogdet(a)[1]
+    res = repro.plan(a, method=method, **kw)()
+    assert isinstance(res, LogdetResult)
+    assert res.method_used == method
+    assert float(res.sign) == 1.0
+    assert res.sem is not None
+    np.testing.assert_allclose(float(res.logabsdet), ref, rtol=5e-2)
+    d = res.diagnostics
+    assert d.wall_time_s is not None and d.wall_time_s >= 0
+    assert d.padded_n == 96 and d.device_count == 1
+    if method in ("chebyshev", "slq"):
+        assert float(res.sem) > 0
+        assert d.matvec_cols is not None and d.matvec_cols > 0
+    else:
+        assert float(res.sem) == 0.0
+        assert d.matvec_cols is None
+    assert d.flops_est is not None and d.flops_est > 0
+    # legacy-style tuple unpacking works on the unified result
+    s, ld = res
+    assert float(s) == 1.0 and float(ld) == float(res.logabsdet)
+
+
+def test_batched_plan_unified_result():
+    stack = np.stack([make_spd(32, s, shift=1.5 + 0.1 * s) for s in range(4)])
+    ref = np.array([np.linalg.slogdet(m)[1] for m in stack])
+    exact = repro.plan(stack, method="mc")()
+    np.testing.assert_allclose(np.asarray(exact.logabsdet), ref, rtol=1e-9)
+    assert exact.sign.shape == (4,) and float(exact.sem.max()) == 0.0
+    est = repro.plan(stack, method="slq", num_probes=48)()
+    assert est.logabsdet.shape == (4,) and est.sem.shape == (4,)
+    rel = np.abs(np.asarray(est.logabsdet) - ref) / np.abs(ref)
+    assert np.median(rel) < 5e-2
+
+
+def test_mesh_plan_matches_serial(mesh1):
+    a = make_spd(24, 2)
+    res = repro.plan(a, method="pmc", mesh=mesh1)()
+    np.testing.assert_allclose(float(res.logabsdet),
+                               np.linalg.slogdet(a)[1], rtol=1e-9)
+    est = repro.plan(a, method="chebyshev", mesh=mesh1,
+                     num_probes=16, degree=32)()
+    direct = repro.plan(a, method="chebyshev", num_probes=16, degree=32)()
+    np.testing.assert_allclose(float(est.logabsdet),
+                               float(direct.logabsdet), rtol=1e-10)
+
+
+def test_spec_only_plan_requires_matching_input():
+    p = repro.plan((16, 16), method="mc")
+    with pytest.raises(TypeError, match="shape spec"):
+        p()
+    with pytest.raises(ValueError, match="compiled for shape"):
+        p(np.eye(8))
+    s, ld = p(np.eye(16) * 3.0)
+    np.testing.assert_allclose(float(ld), 16 * np.log(3.0), rtol=1e-12)
+
+
+def test_precision_override_casts():
+    a = make_spd(24, 3)                      # float64 under x64
+    p = repro.plan((24, 24), method="mc", precision="float32")
+    res = p(a)
+    assert res.logabsdet.dtype == jnp.float32
+
+
+def test_exact_plan_rejects_runtime_randomness():
+    p = repro.plan((8, 8), method="mc")
+    with pytest.raises(TypeError, match="key"):
+        p(np.eye(8), key=jax.random.PRNGKey(0))
+
+
+# ------------------------------------------------- caching and no-retrace
+
+def test_plan_cache_shares_compiled_executable():
+    a = make_spd(20, 4)
+    p1 = repro.plan(a, method="mc_staged")
+    p2 = repro.plan((20, 20), method="mc_staged")
+    assert p1._fwd is p2._fwd                 # one artifact, both handles
+    p3 = repro.plan((20, 20), method="mc_staged", config=ExactConfig())
+    assert p3._fwd is p1._fwd                 # default config == no kwargs
+
+
+def test_repeated_plan_calls_do_not_retrace():
+    p = repro.plan((24, 24), method="chebyshev", num_probes=8, degree=16)
+    assert p.compiled
+    a = make_spd(24, 0)
+    r1 = p(a, key=jax.random.PRNGKey(0))
+    r2 = p(jnp.asarray(a) + 0.01 * jnp.eye(24), key=jax.random.PRNGKey(1))
+    r3 = p(a, key=jax.random.PRNGKey(2))
+    assert p.trace_count == 1, f"retraced: {p.trace_count}"
+    assert float(r1.logabsdet) != float(r2.logabsdet)
+    assert float(r1.logabsdet) != float(r3.logabsdet)  # fresh key, new draw
+
+
+def test_exact_plan_does_not_retrace_either():
+    p = repro.plan((16, 16), method="mc")
+    p(make_spd(16, 0))
+    p(make_spd(16, 1))
+    p(make_spd(16, 2))
+    assert p.trace_count == 1
+    # value_and_grad reuses the plan's own compiled forward
+    p.value_and_grad(make_spd(16, 3))
+    assert p.trace_count == 1
+
+
+def test_legacy_shim_reuses_plan_cache():
+    from repro.core.plan import _PLAN_CACHE
+    a = make_spd(28, 5)
+    with pytest.warns(DeprecationWarning, match="slogdet"):
+        from repro.core import slogdet
+        s1, ld1 = slogdet(a, method="mc_staged")
+    before = len(_PLAN_CACHE)
+    with pytest.warns(DeprecationWarning):
+        s2, ld2 = slogdet(np.asarray(a) * 1.0, method="mc_staged")
+    assert len(_PLAN_CACHE) == before         # second call: cache hit
+    assert float(ld1) == float(ld2)
+    # and the shim agrees with the plan it wraps
+    res = repro.plan(a, method="mc_staged")()
+    assert float(res.logabsdet) == float(ld1)
+
+
+def test_legacy_logdet_batched_warns_and_matches():
+    stack = np.stack([make_spd(24, s) for s in range(3)])
+    with pytest.warns(DeprecationWarning, match="logdet_batched"):
+        from repro.core import logdet_batched
+        legacy = logdet_batched(stack, method="mc")
+    res = repro.plan(stack, method="mc")()
+    np.testing.assert_array_equal(np.asarray(legacy),
+                                  np.asarray(res.logabsdet))
+
+
+def test_runtime_bounds_are_execution_inputs():
+    """Concrete scalar bounds bake into the (hashable) config; traced
+    bounds ride the call — both produce the bounded-Chebyshev value."""
+    a = make_spd(32, 9)
+    lo, hi = 0.5, 40.0
+    static = repro.plan(a, method="chebyshev", num_probes=8, degree=16,
+                        lmin=lo, lmax=hi)
+    base = static()
+    # concrete 0-d arrays coerce into the config (cache stays hashable)
+    arr_cfg = repro.plan(a, method="chebyshev", num_probes=8, degree=16,
+                         lmin=jnp.asarray(lo), lmax=jnp.asarray(hi))
+    assert arr_cfg.config.lmin == lo and arr_cfg._fwd is static._fwd
+    # traced bounds cannot be static config ...
+    with pytest.raises(TypeError, match="execution time"):
+        jax.jit(lambda b: repro.plan((32, 32), method="chebyshev",
+                                     lmin=b, lmax=4.0).config)(jnp.asarray(lo))
+    # ... they are runtime inputs instead, inside or outside jit
+    unbounded = repro.plan(a, method="chebyshev", num_probes=8, degree=16)
+    rt = unbounded(lmin=jnp.asarray(lo), lmax=jnp.asarray(hi))
+    np.testing.assert_allclose(float(rt.logabsdet), float(base.logabsdet),
+                               rtol=1e-12)
+    jit_ld = jax.jit(lambda x, b: unbounded.logdet(x, lmin=b[0], lmax=b[1]))(
+        jnp.asarray(a), jnp.asarray([lo, hi]))
+    np.testing.assert_allclose(float(jit_ld), float(base.logabsdet),
+                               rtol=1e-12)
+
+
+def test_legacy_shim_accepts_traced_bounds():
+    a = jnp.asarray(make_spd(24, 10))
+    from repro.core import slogdet
+    with pytest.warns(DeprecationWarning):
+        ref = slogdet(a, method="chebyshev", num_probes=8, degree=16,
+                      lmin=0.5, lmax=40.0)[1]
+
+        def f(x, b):
+            return slogdet(x, method="chebyshev", num_probes=8, degree=16,
+                           lmin=b[0], lmax=b[1])[1]
+
+        got = jax.jit(f)(a, jnp.asarray([0.5, 40.0]))
+    np.testing.assert_allclose(float(got), float(ref), rtol=1e-12)
+
+
+def test_mesh_value_and_grad_matches_forward_without_padding(mesh1):
+    """User bounds that exclude 1 must NOT be widened when the mesh
+    embedding did not pad — forward and value_and_grad must agree."""
+    a = make_spd(32, 11)                     # 32 % 1 == 0: no padding
+    p = repro.plan(a, method="chebyshev", mesh=mesh1, num_probes=8,
+                   degree=16, lmin=1.5, lmax=40.0)
+    k = jax.random.PRNGKey(0)
+    fwd = p(a, key=k)
+    vag_res, _ = p.value_and_grad(a, key=k)
+    np.testing.assert_allclose(float(vag_res.logabsdet),
+                               float(fwd.logabsdet), rtol=1e-12)
+
+
+def test_grad_prebuild_honored_on_cache_hit():
+    repro.plan((20, 20), method="ge")                  # populate cache
+    p = repro.plan((20, 20), method="ge", grad=True)   # cache hit
+    assert p.grad and "vag" in p._cache
+
+
+# ---------------------------------------------------------------- gradients
+
+def test_plan_logdet_fn_is_differentiable_exact():
+    a = jnp.asarray(make_spd(12, 6))
+    p = repro.plan((12, 12), method="mc")
+    g = jax.grad(lambda x: p.logdet(x))(a)
+    np.testing.assert_allclose(np.asarray(g),
+                               np.linalg.inv(np.asarray(a)).T,
+                               rtol=1e-8, atol=1e-10)
+
+
+def test_plan_logdet_fn_composes_with_jit_and_vmap():
+    p = repro.plan((12, 12), method="slq", num_probes=8, num_steps=10)
+    stack = jnp.asarray(np.stack([make_spd(12, s) for s in range(3)]))
+    g = jax.vmap(jax.grad(lambda x: p.logdet(x, key=jax.random.PRNGKey(0))))(
+        stack)
+    assert g.shape == stack.shape and bool(jnp.isfinite(g).all())
+
+
+def test_value_and_grad_exact():
+    a = make_spd(16, 7)
+    res, bar = repro.plan(a, method="mc").value_and_grad()
+    np.testing.assert_allclose(float(res.logabsdet),
+                               np.linalg.slogdet(a)[1], rtol=1e-9)
+    np.testing.assert_allclose(np.asarray(bar), np.linalg.inv(a).T,
+                               rtol=1e-8, atol=1e-10)
+    assert res.diagnostics.cg_iters is None   # analytic inverse, no CG
+
+
+def test_value_and_grad_estimator_reports_cg_iters():
+    a = make_spd(32, 8)
+    p = repro.plan(a, method="chebyshev", num_probes=64, degree=48)
+    res, bar = p.value_and_grad(key=jax.random.PRNGKey(3))
+    assert res.diagnostics.cg_iters is not None
+    assert res.diagnostics.cg_iters > 0
+    # the explicit pullback must agree with autodiff through the plan
+    g = jax.grad(lambda x: p.logdet(x, key=jax.random.PRNGKey(3)))(
+        jnp.asarray(a))
+    np.testing.assert_allclose(np.asarray(bar), np.asarray(g),
+                               rtol=1e-6, atol=1e-8)
+
+
+def test_value_and_grad_structured_operator():
+    ka = make_spd(5, 0)
+    kb = make_spd(6, 1)
+    from repro.estimators import KroneckerOperator
+    op = KroneckerOperator(jnp.asarray(ka), jnp.asarray(kb))
+    p = repro.plan(op, method="slq", num_probes=32, num_steps=20)
+    res, (ga, gb) = p.value_and_grad()
+    assert ga.shape == (5, 5) and gb.shape == (6, 6)   # factor-shaped
+    assert res.diagnostics.cg_iters > 0
+    ref = 6 * np.linalg.slogdet(ka)[1] + 5 * np.linalg.slogdet(kb)[1]
+    assert abs(float(res.logabsdet) - ref) < 5 * float(res.sem) + 0.5
+
+
+# --------------------------------------------------------- pad dtype fix
+
+@pytest.mark.parametrize("dtype", [jnp.int32, jnp.float16, jnp.bfloat16])
+def test_pad_to_multiple_preserves_dtype(dtype):
+    from repro.core import pad_to_multiple
+    a = jnp.ones((3, 3), dtype)
+    out = pad_to_multiple(a, 4)
+    assert out.dtype == dtype, (out.dtype, dtype)
+    assert out.shape == (4, 4)
+    assert int(out[3, 3]) == 1
+
+
+# ----------------------------------------------------------- plan hints
+
+def test_plan_hints_advertised_by_all_backends():
+    from repro.estimators import (
+        BatchedOperator, DenseOperator, KroneckerOperator, StencilOperator,
+        ToeplitzOperator,
+    )
+    n = 36
+    a = jnp.asarray(make_spd(n, 0))
+    cases = {
+        "dense": DenseOperator(a),
+        "batched": BatchedOperator(a[None]),
+        "kron": KroneckerOperator(a[:6, :6], a[:6, :6]),
+        "toeplitz": ToeplitzOperator(a[0]),
+        "stencil": StencilOperator((-1, 0, 1),
+                                   jnp.asarray([-1.0, 2.5, -1.0]), n=n),
+    }
+    for name, op in cases.items():
+        h = op.plan_hints()
+        assert h.structure == name
+        assert h.matvec_flops > 0
+        assert h.device_count >= 1
+    # structure beats dense on per-column cost
+    assert (cases["stencil"].plan_hints().matvec_flops
+            < cases["dense"].plan_hints().matvec_flops)
+    assert cases["dense"].plan_hints().materializable
+    assert not cases["kron"].plan_hints().materializable
