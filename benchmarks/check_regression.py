@@ -23,11 +23,18 @@ record for the 512 request (nA = nB = 23).  Baseline records with no
 fresh counterpart are reported but do not fail the gate (method sets may
 shrink deliberately); a fresh run missing EVERY gated record fails.
 
-Refresh the baseline after a legitimate perf/accuracy change:
+The exact-path records from ``benchmarks.condense_bench`` (keyed on
+(n, route, "dense", pass)) are gated the same way against
+``bench_out/condense_baseline.json`` whenever that baseline is committed;
+being deterministic, they also sharpen the runner-speed probe.
+
+Refresh the baselines after a legitimate perf/accuracy change:
 
     PYTHONPATH=src python -m benchmarks.estimators_bench \
         --sizes 256,512 --operator all --iters 3 --grad
     cp bench_out/estimators.json bench_out/estimators_baseline.json
+    PYTHONPATH=src python -m benchmarks.condense_bench --sizes 256,512
+    cp bench_out/condense.json bench_out/condense_baseline.json
 """
 from __future__ import annotations
 
@@ -57,30 +64,13 @@ def speed_ratio(baseline: dict, fresh: dict) -> float:
 
 
 def key(rec):
-    return (rec["n"], rec["method"], rec.get("operator", "dense"),
-            rec.get("pass", "fwd"))
+    return (rec["n"], rec.get("method", rec.get("route")),
+            rec.get("operator", "dense"), rec.get("pass", "fwd"))
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--fresh", type=Path,
-                    default=BENCH_DIR / "estimators.json")
-    ap.add_argument("--baseline", type=Path,
-                    default=BENCH_DIR / "estimators_baseline.json")
-    args = ap.parse_args(argv)
-
-    baseline = {key(r): r for r in json.loads(args.baseline.read_text())
-                if r["n"] in GATED_N}
-    fresh = {key(r): r for r in json.loads(args.fresh.read_text())
-             if r["n"] in GATED_N}
-    if not baseline:
-        print(f"FAIL: no gated records (N in {GATED_N}) in {args.baseline}")
-        return 1
-
-    speed = speed_ratio(baseline, fresh)
-    print(f"runner speed calibration: x{speed:.2f} vs baseline machine")
-
-    failures, compared = [], 0
+def gate(baseline: dict, fresh: dict, speed: float, failures: list) -> int:
+    """Compare one record set; append failures; return #compared."""
+    compared = 0
     for k, base in sorted(baseline.items()):
         got = fresh.get(k)
         if got is None:
@@ -103,6 +93,61 @@ def main(argv=None):
         print(f"{str(k):56s} t={got['seconds']:.3f}s/{t_lim:.3f}s "
               f"err={got['rel_err']:.2e}/{e_lim:.2e}  "
               f"{', '.join(flags) or 'ok'}")
+    return compared
+
+
+def _load(path: Path, gated_only: bool = True) -> dict:
+    recs = json.loads(path.read_text())
+    return {key(r): r for r in recs
+            if not gated_only or r["n"] in GATED_N}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", type=Path,
+                    default=BENCH_DIR / "estimators.json")
+    ap.add_argument("--baseline", type=Path,
+                    default=BENCH_DIR / "estimators_baseline.json")
+    ap.add_argument("--condense-fresh", type=Path,
+                    default=BENCH_DIR / "condense.json")
+    ap.add_argument("--condense-baseline", type=Path,
+                    default=BENCH_DIR / "condense_baseline.json")
+    ap.add_argument("--skip-condense", action="store_true",
+                    help="gate the estimator records only")
+    args = ap.parse_args(argv)
+
+    baseline = _load(args.baseline)
+    fresh = _load(args.fresh)
+    if not baseline:
+        print(f"FAIL: no gated records (N in {GATED_N}) in {args.baseline}")
+        return 1
+
+    speed = speed_ratio(baseline, fresh)
+    print(f"runner speed calibration: x{speed:.2f} vs baseline machine")
+
+    failures: list = []
+    compared = gate(baseline, fresh, speed, failures)
+
+    # ---- exact condensation routes (benchmarks.condense_bench) ----------
+    if not args.skip_condense and args.condense_baseline.exists():
+        if not args.condense_fresh.exists():
+            print(f"FAIL: {args.condense_fresh} missing — run "
+                  "benchmarks.condense_bench before the gate")
+            return 1
+        cond_base = _load(args.condense_baseline)
+        cond_fresh = _load(args.condense_fresh)
+        # runner-speed probe: ONLY the GE baseline rows.  GE shares no
+        # code with the engine routes being gated, so a uniform engine
+        # regression cannot normalize itself away (it would if cspeed
+        # came from the median of the gated routes themselves).
+        ratios = sorted(cond_fresh[k]["seconds"] / b["seconds"]
+                        for k, b in cond_base.items()
+                        if k[1] == "ge" and k in cond_fresh
+                        and b["seconds"] > 0)
+        cspeed = max(1.0, ratios[len(ratios) // 2]) if ratios else speed
+        print(f"condense runner speed (ge probe): x{cspeed:.2f} "
+              "vs baseline machine")
+        compared += gate(cond_base, cond_fresh, cspeed, failures)
 
     if compared == 0:
         print("FAIL: fresh run has none of the gated baseline records")

@@ -1,15 +1,41 @@
-"""Roofline report: reads launch/dryrun.py results (dryrun_results.jsonl)
-and renders the §Roofline table (one row per arch x shape on the single-pod
-mesh): three terms in seconds, dominant bottleneck, MODEL_FLOPS/HLO_FLOPs,
-and a one-line lever per row.
+"""Roofline tooling: the measurement pass that calibrates the method
+selector, plus the §Roofline report over launch/dryrun.py results.
+
+Calibration (``--calibrate``)
+-----------------------------
+Measures the four terms `repro.core.calibration` prices routes with, on
+THIS machine:
+
+  gemm_flops        median-timed f32 GEMM (the MXU/BLAS roofline that
+                    prices panel updates and estimator matvec slabs)
+  stream_bytes      median-timed fused rank-1 update (read + write the
+                    buffer once: the streaming-bandwidth roofline of the
+                    faithful condensation step)
+  collective_lat /  a shard_map psum loop over 8 host devices at two
+  collective_bytes  payload sizes; the (latency, bandwidth) line is fit
+                    from the two timings
+
+and persists them to ``bench_out/roofline_calibration.json`` — the table
+``select_method`` / ``select_route`` load (see repro.core.calibration for
+the search order).  Re-run after moving to new hardware:
+
+    PYTHONPATH=src python -m benchmarks.roofline --calibrate
+
+Report (default)
+----------------
+Reads launch/dryrun.py results (dryrun_results.jsonl) and renders the
+§Roofline table (one row per arch x shape on the single-pod mesh): three
+terms in seconds, dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and a
+one-line lever per row.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import time
 from pathlib import Path
 
-from benchmarks._common import OUT_DIR, write_csv
+from benchmarks._common import OUT_DIR, run_with_devices, timeit, write_csv
 
 LEVERS = {
     "compute_s": "raise MXU utilization: larger per-chip tiles / fewer remat "
@@ -55,11 +81,120 @@ def render(recs, mesh: str = "16x16"):
     return rows, skips
 
 
+# ---------------------------------------------------------------- calibrate
+
+_COLLECTIVE_CHILD = """
+import json, time
+import numpy as np
+import jax, jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec
+from repro._compat import make_mesh, shard_map, pvary
+
+P = jax.device_count()
+mesh = make_mesh((P,), ("rows",))
+STEPS = {steps}
+out = {{}}
+for payload in {payloads}:
+    def kernel(x):
+        def body(i, acc):
+            # one data-dependent psum per step: a pivot-row broadcast
+            return lax.psum(x[0] + acc * 1e-9, "rows")
+        acc = pvary(jnp.zeros(x.shape[1:], x.dtype), "rows")
+        return lax.fori_loop(0, STEPS, body, acc).reshape(1, -1)
+    f = shard_map(kernel, mesh=mesh,
+                  in_specs=(PartitionSpec("rows", None),),
+                  out_specs=PartitionSpec("rows", None))
+    jf = jax.jit(f)
+    x = jnp.zeros((P, payload), jnp.float32)
+    jax.block_until_ready(jf(x))
+    ts = []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jf(x))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    out[str(payload)] = ts[len(ts) // 2] / STEPS
+print(json.dumps(out))
+"""
+
+
+def _measure_collectives(devices: int = 8, steps: int = 200,
+                         payloads=(256, 65536)):
+    """(latency_s, bytes_per_s) fit from a two-payload psum loop."""
+    raw = json.loads(run_with_devices(
+        _COLLECTIVE_CHILD.format(steps=steps, payloads=list(payloads)),
+        devices, x64=False).strip().splitlines()[-1])
+    b1, b2 = (4 * p for p in payloads)          # f32 payload bytes
+    t1, t2 = raw[str(payloads[0])], raw[str(payloads[1])]
+    if t2 <= t1:                                # noise floor: all latency
+        return max(t1, t2), 1e12, raw
+    bw = (b2 - b1) / (t2 - t1)
+    lat = max(t1 - b1 / bw, 1e-9)
+    return lat, bw, raw
+
+
+def calibrate(out_path: Path, *, gemm_n: int = 1536, stream_n: int = 4096,
+              devices: int = 8):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ref
+
+    rng = np.random.default_rng(0)
+
+    a = jnp.asarray(rng.standard_normal((gemm_n, gemm_n)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((gemm_n, gemm_n)), jnp.float32)
+    t_gemm = timeit(jax.jit(jnp.dot), a, b, iters=5)
+    gemm_flops = 2.0 * gemm_n ** 3 / t_gemm
+
+    s = jnp.asarray(rng.standard_normal((stream_n, stream_n)), jnp.float32)
+    pc = jnp.asarray(rng.standard_normal((stream_n,)), jnp.float32)
+    pr = jnp.asarray(rng.standard_normal((stream_n,)), jnp.float32)
+    t_r1 = timeit(jax.jit(ref.rank1_update_ref), s, pc, pr, iters=5)
+    # read + write the buffer, stream the two vectors: ~3 x n^2 x 4 bytes
+    stream_bytes = 3.0 * stream_n * stream_n * 4 / t_r1
+
+    lat, coll_bw, raw = _measure_collectives(devices)
+
+    table = {
+        "gemm_flops": gemm_flops,
+        "stream_bytes": stream_bytes,
+        "collective_lat": lat,
+        "collective_bytes": coll_bw,
+        "source": f"measured:{jax.default_backend()}",
+        "meta": {
+            "gemm_n": gemm_n, "gemm_seconds": t_gemm,
+            "stream_n": stream_n, "rank1_seconds": t_r1,
+            "collective_devices": devices,
+            "collective_raw_s_per_step": raw,
+            "jax": jax.__version__,
+            "unix_time": time.time(),
+        },
+    }
+    out_path.parent.mkdir(exist_ok=True)
+    out_path.write_text(json.dumps(table, indent=2) + "\n")
+    print(f"calibration -> {out_path}")
+    for k in ("gemm_flops", "stream_bytes", "collective_lat",
+              "collective_bytes"):
+        print(f"  {k:18s} {table[k]:.4g}")
+    return table
+
+
+# ------------------------------------------------------------------- report
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--results", default="dryrun_results.jsonl")
     ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="measure the device roofline and write the "
+                         "selector's calibration table")
+    ap.add_argument("--out", default=str(OUT_DIR / "roofline_calibration.json"))
     args = ap.parse_args(argv)
+    if args.calibrate:
+        return calibrate(Path(args.out))
     path = Path(args.results)
     if not path.exists():
         print(f"roofline: {path} not found — run "

@@ -108,7 +108,8 @@ def make_logdet_plan(components, dim, *, method, num_probes, degree,
     """Compile the (K, d, d) -> (K,) logdet plan once, before training."""
     shape = (components, dim, dim)
     if method == "mc":
-        return repro.plan(shape, method="mc")
+        # exact engine route, vmapped per component matrix
+        return repro.plan(shape, method="exact", schedule="serial")
     if method == "chebyshev":
         return repro.plan(shape, method="chebyshev",
                           num_probes=num_probes, degree=degree)

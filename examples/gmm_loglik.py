@@ -76,8 +76,10 @@ def make_batched_logdet_plan(k: int, d: int, *, how: str, mesh):
     """
     if how == "exact":
         if mesh.size > 1:
-            return repro.plan((d, d), method="pmc", mesh=mesh), True
-        return repro.plan((k, d, d), method="mc"), False
+            return repro.plan((d, d), method="exact", schedule="mesh",
+                              mesh=mesh), True
+        return repro.plan((k, d, d), method="exact",
+                          schedule="serial"), False
     kw = {}
     if how != "auto":
         kw["num_probes"] = 32

@@ -21,6 +21,7 @@ import numpy as np
 
 import repro
 from repro.core import METHODS
+from repro.core.configs import LEGACY_EXACT_ROUTES
 from repro.data.synthetic import random_matrix
 from repro.launch.mesh import make_rows_mesh
 
@@ -43,8 +44,11 @@ def main():
     print(f"devices: {jax.device_count()}  (methods p* use all of them)\n")
 
     estimators = {"chebyshev", "slq"}
-    for m in METHODS + ("auto",):
-        kw = dict(mesh=mesh) if m.startswith("p") else {}
+    # the legacy route strings are deprecated aliases of method="exact"
+    # engine tuples — the engine row plus the baselines cover everything
+    methods = tuple(m for m in METHODS if m not in LEGACY_EXACT_ROUTES)
+    for m in methods + ("auto",):
+        kw = dict(mesh=mesh) if m.startswith("p") or m == "exact" else {}
         x, want_s, want_ld = a, s_ref, ld_ref
         if m in estimators or m == "auto":
             kw = dict(num_probes=32, seed=0) if m != "auto" else {}

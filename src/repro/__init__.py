@@ -21,16 +21,19 @@ diagnostics).  Subsystems:
 The legacy string API (``repro.core.slogdet``) survives one release as a
 deprecated shim — see docs/api.md for the migration guide.
 """
+from repro.core.calibration import Calibration, load_calibration
 from repro.core.configs import (
-    ChebyshevConfig, ExactConfig, SLQConfig,
+    ChebyshevConfig, EngineConfig, ExactConfig, SLQConfig,
 )
 from repro.core.result import Diagnostics, LogdetResult
 from repro.core.plan import (
-    LogdetPlan, ProblemSpec, plan, select_method, spec_of,
+    LogdetPlan, ProblemSpec, plan, select_method, select_route, spec_of,
 )
 
 __all__ = [
-    "plan", "LogdetPlan", "ProblemSpec", "select_method", "spec_of",
-    "ExactConfig", "ChebyshevConfig", "SLQConfig",
+    "plan", "LogdetPlan", "ProblemSpec", "select_method", "select_route",
+    "spec_of",
+    "ExactConfig", "EngineConfig", "ChebyshevConfig", "SLQConfig",
+    "Calibration", "load_calibration",
     "LogdetResult", "Diagnostics",
 ]

@@ -20,17 +20,21 @@ from repro.core.scalapack import parallel_slogdet_lu
 from repro.core.api import (
     slogdet, logdet, logdet_batched, pad_to_multiple, METHODS,
 )
+from repro.core.calibration import Calibration, load_calibration
 from repro.core.configs import (
-    ChebyshevConfig, ExactConfig, SLQConfig, config_for,
+    ChebyshevConfig, EngineConfig, ExactConfig, SLQConfig, config_for,
 )
+from repro.core.engine import engine_slogdet
 from repro.core.result import Diagnostics, LogdetResult
 from repro.core.plan import (
-    LogdetPlan, ProblemSpec, plan, select_method, spec_of,
+    LogdetPlan, ProblemSpec, plan, select_method, select_route, spec_of,
 )
 
 __all__ = [
     "slogdet", "logdet", "logdet_batched", "pad_to_multiple", "METHODS",
-    "plan", "LogdetPlan", "ProblemSpec", "select_method", "spec_of",
+    "plan", "LogdetPlan", "ProblemSpec", "select_method", "select_route",
+    "spec_of",
+    "EngineConfig", "engine_slogdet", "Calibration", "load_calibration",
     "ExactConfig", "ChebyshevConfig", "SLQConfig", "config_for",
     "LogdetResult", "Diagnostics",
     "slogdet_condense", "slogdet_condense_staged", "condense_steps",

@@ -165,9 +165,9 @@ def logdet_batched(stack, *, method: str = "chebyshev", **kw):
             raise ValueError(
                 "logdet_batched needs a batched operator (with a .batch "
                 "axis); use estimate_logdet for a single operator")
-        if method == "mc":
+        if method not in _ESTIMATOR:
             raise TypeError(
-                "method 'mc' needs a materialized (B, n, n) stack; "
+                f"method {method!r} needs a materialized (B, n, n) stack; "
                 "operator inputs require an estimator method "
                 f"{_est_names}")
         key = kw.pop("key", None)
@@ -178,10 +178,10 @@ def logdet_batched(stack, *, method: str = "chebyshev", **kw):
     stack = jnp.asarray(stack)
     if stack.ndim != 3 or stack.shape[1] != stack.shape[2]:
         raise ValueError(f"expected (B, n, n) stack, got {stack.shape}")
-    if method == "mc":
-        if kw:
-            raise TypeError(f"method 'mc' takes no estimator keywords: {kw}")
-        p = _make_plan(stack, method="mc", validate=False)
+    if method not in _ESTIMATOR:
+        # any exact engine route, vmapped per matrix; mesh schedules raise
+        # a clear TypeError inside plan (ONE matrix per mesh)
+        p = _make_plan(stack, method=method, validate=False, **kw)
         return p.logdet(stack)
     key = kw.pop("key", None)
     probes = kw.pop("probes", None)

@@ -1,43 +1,27 @@
-"""Blocked (rank-K panel) matrix condensation — the paper's "future work".
+"""Blocked (rank-K panel) condensation — engine instantiations.
 
-The faithful rank-1 condensation has arithmetic intensity ~0.25 FLOP/byte and
-is HBM-bandwidth-bound on TPU.  Accumulating K pivot rows into a panel and
-applying the trailing update as ONE rank-K GEMM raises intensity to ~K/2 and
-moves the work onto the MXU — while keeping both of MC's schedule freedoms
-(local pivot-column choice inside the panel, block row distribution, no global
-pivot search).  This is the main beyond-paper optimization (§Perf).
+The panel primitives (`panel_factor`, `apply_panel`) and the drivers live
+in `repro.core.engine`; this module keeps the historical names as thin
+wrappers over the engine's ``update="panel"`` routes.
 
-Structure per panel (right-looking, like blocked LU but with MC pivoting):
-
-  1. *Panel factorization* (owner rows, K x N buffer): K rank-1 condensation
-     steps restricted to the panel rows; each step picks its pivot column by
-     max-|.| over live columns, swaps it to the live end, normalizes.  All
-     swaps are applied to the whole panel buffer so the stored rows stay in
-     one consistent coordinate system; the buffer ends up holding
-     ``R`` (K x N), with ``R[k]`` having 1 at its own pivot column and 0 at
-     earlier pivots' columns.
-  2. *Broadcast* ``(R, pivot cols)`` — ONE collective per K rows (the paper's
-     per-row broadcast, amortized K-fold).
-  3. *Trailing update*: apply the K column swaps, read the pivot-column block
-     ``Pc`` (rows x K), solve the K x K unit-triangular system
-     ``C @ T = Pc`` (T read from R's pivot columns), then ``A -= C @ R``
-     — the MXU GEMM.
-
-Communication per K rows: one (K x N + K) broadcast — K-fold fewer collectives
-than rank-1 MC, K-fold larger payload (same bytes, far fewer latencies).
+Why panels: the faithful rank-1 condensation has arithmetic intensity
+~0.25 FLOP/byte and is HBM-bandwidth-bound.  Accumulating K pivot rows
+into a panel and applying the trailing update as ONE rank-K GEMM raises
+intensity to ~K/2 and moves the work onto the MXU — while keeping both of
+MC's schedule freedoms (local pivot-column choice inside the panel, block
+row distribution, no global pivot search).  Communication per K rows on
+the mesh schedule: one (K x N + K) broadcast — K-fold fewer collectives
+than rank-1 MC at the same total bytes.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-from jax import lax
-from jax.sharding import PartitionSpec
-
-from repro._compat import axis_size as _axis_size, shard_map as _shard_map
-from repro.core.condense import condense_steps, slogdet_condense
-from repro.core.parallel import mc_step_fn
+from repro.core.engine import (
+    EngineConfig,
+    apply_panel,
+    blocked_full as slogdet_condense_blocked,
+    build_mesh,
+    panel_factor,
+)
 
 __all__ = [
     "panel_factor",
@@ -47,252 +31,19 @@ __all__ = [
 ]
 
 
-def panel_factor(panel: jax.Array, m0, *, r_pos=0, update_fn=None):
-    """Factorize a K-row condensation panel.
-
-    Args:
-      panel: (K, N) rows to eliminate (static shape; live cols are [0, m0)).
-      m0:    live column count before this panel (may be traced).
-      r_pos: number of live rows above the panel's rows in the global live
-             ordering (0 for the serial schedule; ``p*(L-(r+1)K)`` for the
-             round-robin parallel schedule) — used only for sign tracking.
-
-    Returns ``(R, ls, sign, logdet)``:
-      R:  (K, N) normalized pivot rows in the final (all-K-swaps) coordinates.
-      ls: (K,) pivot column index chosen at each step, *in the coordinates
-          current at that step* — consumers must replay the swaps in order.
-    """
-    K, N = panel.shape
-    dt = panel.dtype
-    cols = jnp.arange(N)
-
-    def body(k, carry):
-        buf, ls, sign, logdet = carry
-        m = m0 - k                       # live cols at this step
-        last = m - 1
-        row = buf[k]
-        absrow = jnp.where(cols < m, jnp.abs(row), -jnp.inf)
-        l = jnp.argmax(absrow)
-        pv = row[l]
-
-        # swap columns l <-> last across the whole panel buffer
-        cl = jnp.take(buf, l, axis=1)
-        clast = jnp.take(buf, last, axis=1)
-        buf = buf.at[:, l].set(clast)
-        buf = buf.at[:, last].set(cl)
-
-        # normalize the pivot row; store it back (it becomes R[k])
-        row = buf[k]
-        safe = jnp.where(pv == 0, jnp.ones((), dt), pv)
-        pr = jnp.where(pv == 0, jnp.zeros_like(row), row / safe)
-        pr = pr.at[last].set(jnp.where(pv == 0, pr[last], 1.0))
-        buf = buf.at[k].set(pr)
-
-        # rank-1 update of the remaining panel rows (k+1..K-1)
-        pc = jnp.take(buf, last, axis=1)
-        pc = jnp.where(jnp.arange(K) <= k, 0.0, pc)
-        if update_fn is None:
-            buf = buf - jnp.outer(pc, pr)
-        else:
-            buf = update_fn(buf, pc, pr)
-
-        ls = ls.at[k].set(l.astype(ls.dtype))
-        parity = jnp.where((r_pos + m - 1) % 2 == 0, 1.0, -1.0).astype(dt)
-        swap_sign = jnp.where(l == last, 1.0, -1.0).astype(dt)
-        sign = sign * jnp.sign(pv) * swap_sign * parity
-        logdet = logdet + jnp.log(jnp.abs(pv))
-        return buf, ls, sign, logdet
-
-    zero = panel[0, 0] * 0
-    ls0 = jnp.zeros((K,), jnp.int32) + (zero * 0).astype(jnp.int32)
-    R, ls, sign, logdet = lax.fori_loop(
-        0, K, body, (panel, ls0, zero + 1, zero)
-    )
-    return R, ls, sign, logdet
-
-
-def apply_panel(block: jax.Array, R: jax.Array, ls: jax.Array, m0,
-                row_mask: jax.Array, *, gemm_fn=None):
-    """Apply a factorized panel to a trailing row block.
-
-    Args:
-      block:    (Lb, N) trailing rows (full static width).
-      R, ls:    panel factorization output (R in final coordinates).
-      m0:       live columns before the panel.
-      row_mask: (Lb,) 1.0 for rows that must be updated, 0.0 for dead/pivot rows.
-
-    Returns the updated block.  ``gemm_fn(block, C, R)`` may override the
-    final GEMM (Pallas kernel hook); default is ``block - C @ R``.
-    """
-    Lb, N = block.shape
-    K = R.shape[0]
-
-    # replay the K column swaps in order: swap ls[k] <-> (m0-1-k)
-    def swap_body(k, blk):
-        l = ls[k]
-        last = m0 - 1 - k
-        cl = jnp.take(blk, l, axis=1)
-        clast = jnp.take(blk, last, axis=1)
-        blk = blk.at[:, l].set(clast)
-        blk = blk.at[:, last].set(cl)
-        return blk
-
-    block = lax.fori_loop(0, K, swap_body, block)
-
-    # pivot-column block, reversed so column k corresponds to pivot k
-    pc_cols = lax.dynamic_slice(block, (0, m0 - K), (Lb, K))   # (Lb, K)
-    Pc = jnp.flip(pc_cols, axis=1)
-
-    # T[k', k] = R[k', pos(pivot k)] — unit upper-triangular in (k', k)
-    t_cols = lax.dynamic_slice(R, (0, m0 - K), (K, K))
-    T = jnp.flip(t_cols, axis=1)
-
-    # C @ T = Pc  =>  T^T C^T = Pc^T (T^T lower, unit diagonal)
-    Ct = jax.scipy.linalg.solve_triangular(
-        T, Pc.T, trans="T", lower=False, unit_diagonal=True
-    )
-    C = Ct.T * row_mask[:, None]
-
-    if gemm_fn is None:
-        return block - C @ R
-    return gemm_fn(block, C, R)
-
-
-@functools.partial(jax.jit, static_argnames=("k", "use_kernel"))
-def slogdet_condense_blocked(a: jax.Array, *, k: int = 32, use_kernel: bool = False):
-    """Serial blocked condensation: panels of ``k`` rows, rank-k GEMM updates.
-
-    Numerically equivalent to `slogdet_condense` up to roundoff; exercises the
-    exact panel/trailing structure used by the parallel blocked variant.
-    """
-    n = a.shape[0]
-    if a.ndim != 2 or a.shape[1] != n:
-        raise ValueError(f"expected square matrix, got {a.shape}")
-    if n <= k:
-        return slogdet_condense(a)
-
-    gemm_fn = None
-    if use_kernel:
-        from repro.kernels import ops as _kops
-        gemm_fn = _kops.panel_update
-
-    n_panels = (n - 1) // k
-    rows = jnp.arange(n)
-
-    def body(q, carry):
-        buf, sign, logdet = carry
-        t0 = q * k
-        m0 = n - t0
-        panel = lax.dynamic_slice(buf, (t0, 0), (k, n))
-        R, ls, psign, plogdet = panel_factor(panel, m0)
-        row_mask = (rows >= t0 + k).astype(buf.dtype)
-        buf = apply_panel(buf, R, ls, m0, row_mask, gemm_fn=gemm_fn)
-        # park the factorized rows back so dead region stays finite
-        buf = lax.dynamic_update_slice(buf, R, (t0, 0))
-        return buf, sign * psign, logdet + plogdet
-
-    zero = a[0, 0] * 0
-    buf, sign, logdet = lax.fori_loop(0, n_panels, body, (a, zero + 1, zero))
-
-    # remainder: rank-1 steps from t0 = n_panels*k to n-2, then the 1x1 tail
-    t0 = n_panels * k
-    buf, rsign, rlogdet = condense_steps(buf, n - 1 - t0, t0=t0)
-    p = buf[n - 1, 0]
-    return (sign * rsign * jnp.sign(p),
-            logdet + rlogdet + jnp.log(jnp.abs(p)))
-
-
 def parallel_slogdet_mc_blocked(mesh, axis_name: str = "rows", *, k: int = 32,
                                 gemm_fn=None, lookahead: bool = False):
-    """Parallel blocked MC over a 1-D mesh: block rows, round-robin K-panels.
+    """Parallel blocked MC over a 1-D mesh: engine route (mesh, panel).
 
-    Device ``p`` factorizes panels of ``k`` of its own rows (keeping MC's
-    local pivoting — still no global pivot search), broadcasts ``(R, ls)``
-    once per panel, and every device applies the rank-k GEMM to its live rows.
-    Remainder rows use the rank-1 schedule; the final P x P tail is gathered
-    and solved redundantly, as in `parallel_slogdet_mc`.
+    Device ``p`` factorizes panels of ``k`` of its own rows, broadcasts
+    ``(R, ls)`` once per panel, and every device applies the rank-k GEMM
+    to its live rows; remainder rows use the rank-1 schedule and the
+    P x P tail is gathered and solved redundantly (`engine.mesh_tail`).
 
-    ``lookahead=True`` reorders each round so the *next* panel's rows are
-    updated first and factorized before the bulk GEMM of the current panel is
-    issued — exposing the factorization and the big GEMM as independent ops
-    that the TPU scheduler can overlap (classic LU lookahead; §Perf).
+    ``lookahead`` is accepted for signature compatibility (the classic LU
+    lookahead reorder is a scheduler hint the engine does not need on the
+    XLA path).
     """
-    nproc = int(mesh.shape[axis_name])
-
-    def kernel(local):
-        L, N = local.shape
-        P = _axis_size(axis_name)
-        me = lax.axis_index(axis_name)
-        n_rounds = (L - 1) // k
-        lrow = jnp.arange(L)
-        zero = local[0, 0] * 0
-
-        def panel_step(g, carry):
-            """Global panel index g = r*P + p."""
-            local, sign, logdet = carry
-            r = g // P
-            p = g % P
-            t0 = g * k
-            m0 = N - t0
-            mine = me == p
-
-            panel = lax.dynamic_slice(local, (r * k, 0), (k, N))
-            r_pos = p * (L - (r + 1) * k)
-            R, ls, psign, plogdet = panel_factor(panel, m0, r_pos=r_pos)
-
-            R_b, ls_b = lax.psum(
-                (jnp.where(mine, R, jnp.zeros_like(R)),
-                 jnp.where(mine, ls, jnp.zeros_like(ls))),
-                axis_name,
-            )
-
-            dead = jnp.where(me <= p, (r + 1) * k, r * k)
-            row_mask = (lrow >= dead).astype(local.dtype)
-            local = apply_panel(local, R_b, ls_b, m0, row_mask, gemm_fn=gemm_fn)
-
-            sign = jnp.where(mine, sign * psign, sign)
-            logdet = logdet + jnp.where(mine, plogdet, zero)
-            return local, sign, logdet
-
-        carry = (local, zero + 1, zero)
-        if n_rounds > 0:  # static: L, k known at trace time
-            carry = lax.fori_loop(0, n_rounds * P, panel_step, carry)
-        local, sign, logdet = carry
-
-        # remainder rows: rank-1 schedule continuing at t = n_rounds*k per dev
-        rem = (L - 1) - n_rounds * k
-        if rem > 0:
-            step = mc_step_fn(axis_name)
-            t_start = n_rounds * k * P
-            local, rsign, rlogdet = lax.fori_loop(
-                t_start, t_start + rem * P, step, (local, zero + 1, zero))
-            sign = sign * rsign
-            logdet = logdet + rlogdet
-
-        # tail: P x P gathered, solved redundantly
-        live = lax.dynamic_slice(local, (L - 1, 0), (1, N))[0, :]
-        tail = lax.all_gather(live, axis_name)
-        tail = lax.slice(tail, (0, 0), (P, P))
-        tsign, tlogdet = slogdet_condense(tail)
-
-        logdet_total = lax.psum(logdet, axis_name) + tlogdet
-        signs = lax.all_gather(sign, axis_name)
-        sign_total = jnp.prod(signs) * tsign
-        return sign_total.reshape(1), logdet_total.reshape(1)
-
-    shmapped = _shard_map(
-        kernel,
-        mesh=mesh,
-        in_specs=(PartitionSpec(axis_name, None),),
-        out_specs=(PartitionSpec(axis_name), PartitionSpec(axis_name)),
-    )
-
-    @jax.jit
-    def run(a):
-        n = a.shape[0]
-        if n % nproc:
-            raise ValueError(f"N={n} not divisible by mesh size {nproc}")
-        sign, logdet = shmapped(a)
-        return sign[0], logdet[0]
-
-    return run
+    cfg = EngineConfig(schedule="mesh", update="panel", panel_k=k,
+                       backend="xla")
+    return build_mesh(cfg, mesh, axis_name, gemm_fn=gemm_fn)

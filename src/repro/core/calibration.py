@@ -1,0 +1,166 @@
+"""Measured-roofline calibration for the method/route selector.
+
+``select_method`` used to price methods with static FLOP constants, which
+made every crossover device-count-invariant (both sides divided by P) and
+wrong on any machine that is not the one the constants were guessed for.
+This module replaces the constants with a **measured calibration table**:
+
+  gemm_flops        sustained GEMM throughput per device (FLOP/s) — prices
+                    panel updates and estimator matvec slabs (MXU work)
+  stream_bytes      sustained streaming read+write bandwidth per device
+                    (bytes/s) — prices the rank-1 update (HBM-bound)
+  collective_lat    per-collective latency (s) — the fixed cost of every
+                    pivot-row broadcast on the mesh schedule
+  collective_bytes  collective payload bandwidth (bytes/s)
+
+The table is produced by ``python -m benchmarks.roofline --calibrate``
+(times a GEMM, a fused rank-1 update, and a shard_map psum loop at two
+payload sizes, then fits latency + bandwidth) and persisted as JSON.
+Search order: ``$REPRO_CALIBRATION`` (a path, or ``static`` to force the
+built-in defaults), then the committed ``bench_out/roofline_calibration
+.json``, then the static defaults.
+
+The cost functions below are the single place route timings are modeled;
+`repro.core.plan.select_route` consumes them.  Because the mesh terms
+(latency x steps + bytes / collective bandwidth) do NOT shrink with P,
+the dense<->estimator and serial<->mesh crossovers now move with device
+count — the paper's own Fig. 7/8 story, priced per machine.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Optional
+
+__all__ = [
+    "Calibration", "STATIC_DEFAULT", "load_calibration",
+    "clear_calibration_cache", "calibration_path", "exact_cost",
+    "estimator_cost",
+]
+
+_ENV_VAR = "REPRO_CALIBRATION"
+_TABLE_NAME = "roofline_calibration.json"
+# probes per matvec slab the estimators batch into one pass (make_probes
+# default) — sets how many sequential collectives an estimator run needs
+_EST_SLAB = 32
+
+
+@dataclass(frozen=True)
+class Calibration:
+    """Per-device roofline terms; see the module docstring."""
+    gemm_flops: float = 4.0e10
+    stream_bytes: float = 1.5e10
+    collective_lat: float = 2.0e-5
+    collective_bytes: float = 4.0e9
+    source: str = "static-default"
+
+    def __post_init__(self):
+        for name in ("gemm_flops", "stream_bytes", "collective_lat",
+                     "collective_bytes"):
+            v = float(getattr(self, name))
+            if not v > 0:
+                raise ValueError(f"calibration {name} must be > 0, got {v}")
+
+
+STATIC_DEFAULT = Calibration()
+
+
+def calibration_path() -> Optional[Path]:
+    """Where a measured table would be loaded from (None -> static)."""
+    env = os.environ.get(_ENV_VAR, "").strip()
+    if env:
+        if env.lower() == "static":
+            return None
+        return Path(env)
+    committed = Path(__file__).resolve().parents[3] / "bench_out" / _TABLE_NAME
+    return committed if committed.exists() else None
+
+
+@functools.lru_cache(maxsize=8)
+def _load(path_str: Optional[str]) -> Calibration:
+    if path_str is None:
+        return STATIC_DEFAULT
+    try:
+        raw = json.loads(Path(path_str).read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        raise ValueError(f"cannot read calibration table {path_str}: {e}")
+    return Calibration(
+        gemm_flops=float(raw["gemm_flops"]),
+        stream_bytes=float(raw["stream_bytes"]),
+        collective_lat=float(raw["collective_lat"]),
+        collective_bytes=float(raw["collective_bytes"]),
+        source=str(raw.get("source", f"measured:{path_str}")),
+    )
+
+
+def load_calibration(path=None) -> Calibration:
+    """The active calibration table (measured if available)."""
+    if path is not None:
+        return _load(str(path))
+    p = calibration_path()
+    return _load(None if p is None else str(p))
+
+
+def clear_calibration_cache():
+    """Re-read tables on next load (test hook / after re-calibration)."""
+    _load.cache_clear()
+
+
+# --------------------------------------------------------------------------
+# route cost model (seconds)
+# --------------------------------------------------------------------------
+
+def exact_cost(n: int, devices: int, cal: Calibration, *,
+               update: str = "rank1", panel_k: int = 32,
+               itemsize: int = 8, batch: int = 1) -> float:
+    """Modeled wall time of an exact condensation route.
+
+    ``devices == 1`` prices the serial/staged schedules; ``devices > 1``
+    the mesh schedule — compute splits P ways, but every eliminated row
+    (or K-row panel) still pays one broadcast, so the communication term
+    is NOT divided by P.  Batched stacks run one device per matrix (no
+    collectives), so ``batch`` scales the compute term only.
+    """
+    if n <= 1:
+        return 0.0
+    flops = (2.0 / 3.0) * float(n) ** 3
+    if update == "panel":
+        # rank-K trailing updates are GEMMs: MXU/peak-FLOP bound
+        compute = flops / cal.gemm_flops
+    else:
+        # rank-1 updates stream the live block once per step: with staged
+        # scheduling the touched area is ~1.5 x sum_m m^2 ~ n^3/2 elements,
+        # read + write  =>  ~ itemsize * n^3 bytes end to end
+        compute = itemsize * float(n) ** 3 / cal.stream_bytes
+    cost = batch * compute / devices
+    if devices > 1:
+        if update == "panel":
+            steps = max(1, n // panel_k)
+            payload = itemsize * panel_k * n          # (K x N) panel + ls
+        else:
+            steps = n
+            payload = itemsize * n                    # one normalized row
+        cost += steps * (cal.collective_lat + payload / cal.collective_bytes)
+    return cost
+
+
+def estimator_cost(n: int, cols: int, matvec_flops: float, devices: int,
+                   cal: Calibration, *, itemsize: int = 8,
+                   batch: int = 1) -> float:
+    """Modeled wall time of a stochastic estimator run.
+
+    ``cols`` is the probe x step budget (total matvec columns); matvec
+    slabs are GEMM-shaped, so compute prices against the measured GEMM
+    roofline.  On a mesh the row-sharded matvec reduces one slab per
+    sequential step.
+    """
+    compute = batch * cols * matvec_flops / (devices * cal.gemm_flops)
+    cost = compute
+    if devices > 1:
+        seq = max(1, cols // _EST_SLAB)
+        payload = itemsize * n * _EST_SLAB
+        cost += seq * (cal.collective_lat + payload / cal.collective_bytes)
+    return cost

@@ -1,34 +1,28 @@
-"""Serial matrix condensation for log-determinant (paper §1–§2.4).
+"""Serial matrix condensation (paper §1–§2.4) — engine instantiations.
 
-Implements the Salem–Said / Haque–Maza condensation step
+The step logic (pivot-column argmax §2.2, row factoring §2.3, §2.4 column
+swap, sign/parity tracking) lives in ONE place: `repro.core.engine`.  This
+module keeps the historical serial entry points as thin wrappers over the
+engine's ``(schedule="serial"|"staged", update="rank1")`` routes:
 
-    det(A) = a_{k,l} * det(B*),   B*_{ij} = a_{ij} - a_{il} * (a_{kj} / a_{k,l})
+  * `slogdet_condense`         — faithful baseline: one static buffer,
+    every step updates the full buffer (dead rows/cols get harmless
+    garbage; ~3x theoretical FLOPs, recorded as the §Perf baseline).
+  * `slogdet_condense_staged`  — geometric re-jit over shrinking static
+    shapes, slicing the live prefix between stages (possible *because of*
+    the §2.4 column-swap trick).
 
-with the paper's three refinements:
-  * pivot column = argmax |pivot row|  (§2.2, robust partial pivoting),
-  * pivot factored out of the *row*    (§2.3),
-  * pivot column swapped with the last live column so the live region stays a
-    contiguous prefix (§2.4 — the paper's cache-contiguity trick; here it is
-    what keeps every step a static-shape prefix that XLA can slice).
-
-Faithful baseline (`slogdet_condense`): the live region shrinks by one
-row/column per step but XLA needs static shapes, so each step updates the full
-static buffer (dead rows/cols receive harmless garbage).  This costs ~3x the
-theoretical FLOPs and is recorded as the §Perf baseline.
-
-`slogdet_condense_staged` re-jits on a geometric schedule of shrinking static
-shapes, slicing the live prefix between stages (possible *because of* the
-column-swap trick).  See core/blocked.py for the rank-K panel variant.
+See core/blocked.py for the rank-K panel routes and core/parallel.py for
+the mesh schedule.
 """
 from __future__ import annotations
 
-import functools
-import math
-from typing import Tuple
-
-import jax
-import jax.numpy as jnp
-from jax import lax
+from repro.core.engine import (
+    combine_slogdet,
+    condense_full as slogdet_condense,
+    condense_steps,
+    staged_full,
+)
 
 __all__ = [
     "slogdet_condense",
@@ -38,157 +32,11 @@ __all__ = [
 ]
 
 
-def _condense_step(buf: jax.Array, t, n_total: int, sign, logdet, *, update_fn=None):
-    """One condensation step on the full static buffer.
-
-    Live region at step ``t``: rows [t, N), cols [0, N - t).  Pivot row is row
-    ``t`` (serial schedule); pivot column is the max-abs entry of the live part
-    of row ``t``.  Returns the updated (buf, sign, logdet).
-    """
-    n = n_total
-    m = n - t                       # live size (traced)
-    col_ids = jnp.arange(n)
-    live_col = col_ids < m
-
-    row = buf[t]                                        # (N,)
-    absrow = jnp.where(live_col, jnp.abs(row), -jnp.inf)
-    l = jnp.argmax(absrow)                              # pivot column (traced)
-    p = row[l]                                          # pivot value
-
-    # --- column swap l <-> m-1 (paper §2.4) --------------------------------
-    last = m - 1
-    col_l = buf[:, l]
-    col_last = buf[:, last]
-    buf = buf.at[:, l].set(col_last)
-    buf = buf.at[:, last].set(col_l)
-    swap_sign = jnp.where(l == last, 1.0, -1.0).astype(buf.dtype)
-
-    # pivot row in swapped coordinates, normalized by the pivot (§2.3).
-    row = row.at[l].set(row[last])
-    # row[last] still holds the pre-swap value; the true pivot now sits at
-    # position `last` in the buffer.  Force it so pr[last] == 1 exactly, which
-    # zeroes the pivot column for all updated rows.
-    row = row.at[last].set(p)
-    safe_p = jnp.where(p == 0, jnp.ones((), buf.dtype), p)
-    pr = jnp.where(p == 0, jnp.zeros_like(row), row / safe_p)
-
-    # pivot column entries; zero at the pivot row so it is left untouched.
-    pc = buf[:, last]
-    pc = pc.at[t].set(0.0)
-    # Rows above t are dead; zero them too so the baseline buffer stays finite
-    # (cosmetic — they are never read again).
-    pc = jnp.where(jnp.arange(n) < t, 0.0, pc)
-
-    if update_fn is None:
-        buf = buf - jnp.outer(pc, pr)
-    else:
-        buf = update_fn(buf, pc, pr)
-
-    # sign bookkeeping: pivot sign, column swap, and Laplace expansion of the
-    # pivot (active row 0, active column m-1) => (-1)^(m-1).
-    parity = jnp.where((m - 1) % 2 == 0, 1.0, -1.0).astype(buf.dtype)
-    sign = sign * jnp.sign(p) * swap_sign * parity
-    logdet = logdet + jnp.log(jnp.abs(p))
-    return buf, sign, logdet
-
-
-def condense_steps(buf: jax.Array, n_steps: int, *, t0: int = 0, update_fn=None):
-    """Run ``n_steps`` condensation steps starting at step offset ``t0``.
-
-    Returns (buf, sign, logdet) with sign/logdet the *contribution* of these
-    steps (combine with `combine_slogdet`).
-    """
-    n = buf.shape[0]
-
-    def body(t, carry):
-        b, s, ld = carry
-        return _condense_step(b, t, n, s, ld, update_fn=update_fn)
-
-    # Derive the initial sign/logdet carries from `buf` so they inherit its
-    # varying-manual-axes type when called inside shard_map (tail solve).
-    zero = buf[0, 0] * 0
-    return lax.fori_loop(t0, t0 + n_steps, body, (buf, zero + 1, zero))
-
-
-def combine_slogdet(parts) -> Tuple[jax.Array, jax.Array]:
-    """Combine (sign, logabsdet) contributions multiplicatively."""
-    sign = functools.reduce(lambda a, b: a * b, [p[0] for p in parts])
-    logdet = functools.reduce(lambda a, b: a + b, [p[1] for p in parts])
-    return sign, logdet
-
-
-@functools.partial(jax.jit, static_argnames=("use_kernel",))
-def slogdet_condense(a: jax.Array, *, use_kernel: bool = False):
-    """Log-determinant via matrix condensation (faithful serial baseline).
-
-    Returns ``(sign, logabsdet)`` with `numpy.linalg.slogdet` semantics.
-    ``use_kernel=True`` routes the rank-1 update through the Pallas kernel
-    (interpret mode on CPU).
-    """
-    n = a.shape[0]
-    if a.ndim != 2 or a.shape[1] != n:
-        raise ValueError(f"expected square matrix, got {a.shape}")
-    if n == 0:
-        return jnp.ones((), a.dtype), jnp.zeros((), a.dtype)
-    if n == 1:
-        return jnp.sign(a[0, 0]), jnp.log(jnp.abs(a[0, 0]))
-
-    update_fn = None
-    if use_kernel:
-        from repro.kernels import ops as _kops
-        update_fn = _kops.rank1_update
-
-    buf, sign, logdet = condense_steps(a, n - 1, update_fn=update_fn)
-    p = buf[n - 1, 0]
-    return sign * jnp.sign(p), logdet + jnp.log(jnp.abs(p))
-
-
-def _stage_schedule(n: int, shrink: float, min_size: int):
-    """Static (size, steps) schedule: run `steps` at static size `size`."""
-    sched = []
-    size = n
-    while size > min_size:
-        nxt = max(min_size, int(math.ceil(size * shrink)))
-        steps = size - nxt
-        if steps <= 0:
-            break
-        sched.append((size, steps))
-        size = nxt
-    sched.append((size, size - 1))  # finish to 1x1
-    return sched
-
-
-@functools.partial(jax.jit, static_argnames=("steps",))
-def _staged_stage(buf, steps: int):
-    b, s, ld = condense_steps(buf, steps)
-    n = buf.shape[0]
-    live = lax.slice(b, (steps, 0), (n, n - steps))
-    return live, s, ld
-
-
-def slogdet_condense_staged(a: jax.Array, *, shrink: float = 0.75,
-                            min_size: int = 64):
+def slogdet_condense_staged(a, *, shrink: float = 0.75, min_size: int = 64):
     """Geometric shape-staged condensation (§Perf optimization 1).
 
-    Runs condensation in stages of static shape, slicing out the live prefix
-    between stages.  FLOP waste drops from ~3x (full static buffer) to ~1.5x
-    with shrink=0.75 (and lower with finer schedules) at the cost of a handful
-    of compilations.
+    Engine route ``(schedule="staged", update="rank1")``: FLOP waste drops
+    from ~3x (full static buffer) to ~1.5x with shrink=0.75 at the cost of
+    a handful of compilations.
     """
-    n = a.shape[0]
-    if n <= min_size:
-        return slogdet_condense(a)
-    parts = []
-    buf = a
-    for size, steps in _stage_schedule(n, shrink, min_size):
-        if buf.shape[0] != size:  # defensive; schedule and buffer must agree
-            raise AssertionError((buf.shape, size))
-        if size - steps <= 1:
-            parts.append(slogdet_condense(buf))
-            buf = None
-            break
-        buf, s, ld = _staged_stage(buf, steps)
-        parts.append((s, ld))
-    if buf is not None:
-        parts.append(slogdet_condense(buf))
-    return combine_slogdet(parts)
+    return staged_full(a, shrink=shrink, min_size=min_size, update="rank1")

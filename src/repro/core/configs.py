@@ -28,14 +28,22 @@ import dataclasses
 from dataclasses import dataclass
 from typing import Optional, Union
 
+from repro.core.engine import (
+    BACKENDS as _ENGINE_BACKENDS, EngineConfig, LEGACY_ROUTES,
+    SCHEDULES as _ENGINE_SCHEDULES, UPDATES as _ENGINE_UPDATES,
+)
+
 __all__ = [
     "ExactConfig", "ChebyshevConfig", "SLQConfig", "LogdetConfig",
-    "config_for", "EXACT_METHODS", "ESTIMATOR_METHODS", "PARALLEL_METHODS",
-    "METHODS",
+    "EngineConfig", "config_for", "EXACT_METHODS", "ESTIMATOR_METHODS",
+    "PARALLEL_METHODS", "METHODS", "LEGACY_EXACT_ROUTES",
 ]
 
-EXACT_METHODS = ("mc", "mc_staged", "mc_blocked", "ge",
-                 "pmc", "pmc_blocked", "pge", "plu")
+# "exact" is the unified condensation engine (schedule x update x backend,
+# see repro.core.engine); the five legacy route strings are deprecated
+# aliases for fixed engine tuples; ge/pge/plu are the comparison baselines
+LEGACY_EXACT_ROUTES = tuple(LEGACY_ROUTES)
+EXACT_METHODS = ("exact",) + LEGACY_EXACT_ROUTES + ("ge", "pge", "plu")
 PARALLEL_METHODS = ("pmc", "pmc_blocked", "pge", "plu")
 ESTIMATOR_METHODS = ("chebyshev", "slq")
 METHODS = EXACT_METHODS + ESTIMATOR_METHODS
@@ -57,17 +65,68 @@ def _require(cond: bool, msg: str):
 class ExactConfig:
     """Knobs of the exact O(N^3) condensation / elimination family.
 
-    ``k``  — panel width of the blocked methods (mc_blocked, pmc_blocked).
-    ``nb`` — block-cyclic tile size of the ScaLAPACK-style LU (plu).
-    Methods that do not use a knob ignore it; both must be positive so one
-    config can serve any exact method.
+    The condensation engine's three axes (``method="exact"``):
+
+    ``schedule`` — "serial" | "staged" | "mesh"; ``None`` resolves at plan
+                   time ("mesh" when a mesh is supplied, else "staged").
+    ``update``   — "rank1" | "panel"; ``None`` resolves to "rank1".
+    ``backend``  — "auto" | "xla" | "pallas" kernel backend.
+    ``k``        — panel width of the rank-K update.
+    ``shrink``/``min_size`` — staged-schedule geometry.
+
+    Baseline-only knob: ``nb`` — block-cyclic tile size of the
+    ScaLAPACK-style LU (``plu``).  Methods that do not use a knob ignore
+    it, so one config class serves every exact method.
     """
     k: int = 32
     nb: int = 1
+    schedule: Optional[str] = None
+    update: Optional[str] = None
+    backend: str = "auto"
+    shrink: float = 0.75
+    min_size: int = 64
 
     def __post_init__(self):
         _require(int(self.k) >= 1, f"k must be >= 1, got {self.k}")
         _require(int(self.nb) >= 1, f"nb must be >= 1, got {self.nb}")
+        _require(self.schedule is None or self.schedule in _ENGINE_SCHEDULES,
+                 f"unknown schedule {self.schedule!r}; "
+                 f"one of {_ENGINE_SCHEDULES}")
+        _require(self.update is None or self.update in _ENGINE_UPDATES,
+                 f"unknown update {self.update!r}; one of {_ENGINE_UPDATES}")
+        _require(self.backend in _ENGINE_BACKENDS,
+                 f"unknown backend {self.backend!r}; "
+                 f"one of {_ENGINE_BACKENDS}")
+        _require(0.0 < float(self.shrink) < 1.0,
+                 f"shrink must be in (0, 1), got {self.shrink}")
+        _require(int(self.min_size) >= 2,
+                 f"min_size must be >= 2, got {self.min_size}")
+
+    def resolved(self, *, mesh_present: bool = False) -> "ExactConfig":
+        """Pin the engine axes (plan-time resolution of the defaults).
+
+        ``backend="auto"`` is pinned to the concrete process backend here
+        so the plan/kernel caches key on what was actually built — a
+        later REPRO_KERNEL_BACKEND flip misses the cache instead of
+        being served a stale executable.
+        """
+        from repro.core.engine import resolve_backend
+        sched = self.schedule or ("mesh" if mesh_present else "staged")
+        upd = self.update or "rank1"
+        backend = resolve_backend(self.backend)
+        if (sched == self.schedule and upd == self.update
+                and backend == self.backend):
+            return self
+        return dataclasses.replace(self, schedule=sched, update=upd,
+                                   backend=backend)
+
+    def engine_config(self) -> EngineConfig:
+        """The `EngineConfig` this config denotes (axes must be resolved)."""
+        _require(self.schedule is not None and self.update is not None,
+                 "engine axes unresolved; call .resolved() first")
+        return EngineConfig(schedule=self.schedule, update=self.update,
+                            panel_k=self.k, backend=self.backend,
+                            shrink=self.shrink, min_size=self.min_size)
 
 
 @dataclass(frozen=True)

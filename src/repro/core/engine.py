@@ -1,0 +1,874 @@
+"""The unified condensation engine: one schedule x update x backend core.
+
+The paper's contribution is ONE step — pivot-column argmax (§2.2), row
+factoring (§2.3), column swap (§2.4) — yet the repo used to reimplement it
+four times (serial, staged, blocked, mesh).  This module is the single
+implementation, parameterized on three orthogonal axes:
+
+  schedule   "serial"  one static buffer, one rank-per-step fori_loop
+             "staged"  geometric re-jit over shrinking static shapes
+             "mesh"    round-robin block rows over a 1-D device mesh
+                       (shard_map; the paper's parallel schedule)
+  update     "rank1"   the faithful outer-product subtract (VPU/bandwidth)
+             "panel"   rank-K panels: factorize K rows, ONE trailing GEMM
+                       (MXU; the paper's "future work", blocked-LU style)
+  backend    "xla"       plain jnp expressions, XLA-fused
+             "pallas"    the fused Pallas kernels (repro.kernels.ops);
+                         off-TPU the kernel bodies run in interpret mode
+                         — never a silent fall-through to the reference
+             "interpret" the kernel bodies through the Pallas interpreter
+                         (deterministic CPU coverage; what CI forces via
+                         REPRO_KERNEL_BACKEND=interpret)
+             "auto"      resolves to the process default at plan time
+                         (env override, else pallas on TPU / xla off)
+
+Every combination shares exactly one implementation of pivot selection,
+§2.4 column-swap bookkeeping, sign/parity tracking, the remainder rank-1
+steps, and the P x P tail reduction (`mesh_tail`).  The legacy modules
+(core/condense.py, core/blocked.py, core/parallel.py) are thin wrappers
+over this engine; the Gaussian-elimination and ScaLAPACK baselines stay
+separate algorithms but adopt the shared sign helpers (`perm_parity`,
+`cyclic_perm`, `guarded_pivot`) and `combine_slogdet`.
+
+Route vocabulary: a legacy route string maps to an `EngineConfig` tuple
+via `LEGACY_ROUTES` —
+
+    mc          -> (serial, rank1)      mc_staged   -> (staged, rank1)
+    mc_blocked  -> (serial, panel)      pmc         -> (mesh,   rank1)
+    pmc_blocked -> (mesh,   panel)
+
+plus the combinations no legacy string ever exposed (staged x panel, any
+x pallas).  New code requests ``repro.plan(..., method="exact",
+schedule=..., update=..., backend=...)``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+from typing import Callable, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec
+
+from repro._compat import (axis_size as _axis_size, pvary as _pvary,
+                           shard_map as _shard_map)
+
+__all__ = [
+    "EngineConfig", "LEGACY_ROUTES", "SCHEDULES", "UPDATES", "BACKENDS",
+    "build_serial", "build_mesh", "engine_slogdet",
+    "condense_steps", "condense_full", "panel_factor", "apply_panel",
+    "panel_rounds_serial", "mc_step_fn", "mc_local_phase", "mesh_tail",
+    "combine_slogdet", "guarded_pivot", "cyclic_perm", "perm_parity",
+    "stage_schedule",
+]
+
+SCHEDULES = ("serial", "staged", "mesh")
+UPDATES = ("rank1", "panel")
+# "interpret" runs the Pallas kernel bodies through the interpreter —
+# the deterministic off-TPU coverage backend CI forces via
+# REPRO_KERNEL_BACKEND; "pallas" off-TPU degrades to it automatically
+BACKENDS = ("auto", "xla", "pallas", "interpret")
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """One point in the schedule x update x backend design space.
+
+    ``panel_k``   panel width of the rank-K update (ignored for rank1).
+    ``shrink``    geometric stage ratio of the staged schedule.
+    ``min_size``  size at which the staged schedule stops re-jitting.
+    Frozen + hashable so it can ride inside `ExactConfig` and key the
+    plan cache.
+    """
+    schedule: str = "staged"
+    update: str = "rank1"
+    panel_k: int = 32
+    backend: str = "auto"
+    shrink: float = 0.75
+    min_size: int = 64
+
+    def __post_init__(self):
+        if self.schedule not in SCHEDULES:
+            raise ValueError(
+                f"unknown schedule {self.schedule!r}; one of {SCHEDULES}")
+        if self.update not in UPDATES:
+            raise ValueError(
+                f"unknown update {self.update!r}; one of {UPDATES}")
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; one of {BACKENDS}")
+        if int(self.panel_k) < 1:
+            raise ValueError(f"panel_k must be >= 1, got {self.panel_k}")
+        if not (0.0 < float(self.shrink) < 1.0):
+            raise ValueError(f"shrink must be in (0, 1), got {self.shrink}")
+        if int(self.min_size) < 2:
+            raise ValueError(f"min_size must be >= 2, got {self.min_size}")
+
+
+# legacy route string -> (schedule, update); the historical spellings all
+# ran the XLA backend with default staging knobs
+LEGACY_ROUTES = {
+    "mc": ("serial", "rank1"),
+    "mc_staged": ("staged", "rank1"),
+    "mc_blocked": ("serial", "panel"),
+    "pmc": ("mesh", "rank1"),
+    "pmc_blocked": ("mesh", "panel"),
+}
+
+
+# --------------------------------------------------------------------------
+# backend hooks
+# --------------------------------------------------------------------------
+
+def resolve_backend(backend: str) -> str:
+    """Pin ``"auto"`` to the concrete process backend.
+
+    The resolved value keys plan caches, so the REPRO_KERNEL_BACKEND env
+    override is captured at resolution time — flipping the env var later
+    builds a new executable instead of serving a stale cached one.
+    """
+    if backend != "auto":
+        return backend
+    from repro.kernels import ops as _kops
+    return _kops.kernel_backend()
+
+
+def _hooks(backend: str) -> Tuple[Optional[Callable], Optional[Callable]]:
+    """(update_fn, gemm_fn) for the resolved backend; None == inline jnp.
+
+    The resolved backend is passed explicitly to the kernel entry points:
+    an engine built for "pallas"/"interpret" always runs the kernel
+    bodies, never the jnp reference, whatever the env var says later.
+    """
+    backend = resolve_backend(backend)
+    if backend == "xla":
+        return None, None
+    from repro.kernels import ops as _kops
+    return (functools.partial(_kops.rank1_update, backend=backend),
+            functools.partial(_kops.panel_update, backend=backend))
+
+
+# --------------------------------------------------------------------------
+# shared sign / pivot helpers (used by the engine AND the GE/LU baselines)
+# --------------------------------------------------------------------------
+
+def guarded_pivot(p, dtype):
+    """A division-safe pivot: 1 where ``p == 0`` (caller masks the result)."""
+    return jnp.where(p == 0, jnp.ones((), dtype), p)
+
+
+def combine_slogdet(parts) -> Tuple[jax.Array, jax.Array]:
+    """Combine (sign, logabsdet) contributions multiplicatively."""
+    sign = functools.reduce(lambda a, b: a * b, [p[0] for p in parts])
+    logdet = functools.reduce(lambda a, b: a + b, [p[1] for p in parts])
+    return sign, logdet
+
+
+def cyclic_perm(n: int, p: int) -> np.ndarray:
+    """Permutation mapping block layout to cyclic: out[d*L + i] = i*p + d."""
+    return np.arange(n).reshape(n // p, p).T.reshape(-1)
+
+
+def perm_parity(perm: np.ndarray) -> float:
+    """Parity (+1/-1) of a permutation via cycle decomposition (O(n))."""
+    seen = np.zeros(len(perm), dtype=bool)
+    parity = 1.0
+    for start in range(len(perm)):
+        if seen[start]:
+            continue
+        clen = 0
+        j = start
+        while not seen[j]:
+            seen[j] = True
+            j = int(perm[j])
+            clen += 1
+        if clen % 2 == 0:
+            parity = -parity
+    return parity
+
+
+# --------------------------------------------------------------------------
+# the condensation step (rank-1) — THE shared implementation
+# --------------------------------------------------------------------------
+
+def _condense_step(buf: jax.Array, t, n_total: int, sign, logdet, *,
+                   update_fn=None):
+    """One condensation step on the full static buffer.
+
+    Live region at step ``t``: rows [t, N), cols [0, N - t).  Pivot row is
+    row ``t`` (serial schedule); pivot column is the max-abs entry of the
+    live part of row ``t``.  Returns the updated (buf, sign, logdet).
+    """
+    n = n_total
+    m = n - t                       # live size (traced)
+    col_ids = jnp.arange(n)
+    live_col = col_ids < m
+
+    row = buf[t]                                        # (N,)
+    absrow = jnp.where(live_col, jnp.abs(row), -jnp.inf)
+    l = jnp.argmax(absrow)                              # pivot column (traced)
+    p = row[l]                                          # pivot value
+
+    # --- column swap l <-> m-1 (paper §2.4) --------------------------------
+    last = m - 1
+    col_l = buf[:, l]
+    col_last = buf[:, last]
+    buf = buf.at[:, l].set(col_last)
+    buf = buf.at[:, last].set(col_l)
+    swap_sign = jnp.where(l == last, 1.0, -1.0).astype(buf.dtype)
+
+    # pivot row in swapped coordinates, normalized by the pivot (§2.3).
+    row = row.at[l].set(row[last])
+    # row[last] still holds the pre-swap value; the true pivot now sits at
+    # position `last` in the buffer.  Force it so pr[last] == 1 exactly, which
+    # zeroes the pivot column for all updated rows.
+    row = row.at[last].set(p)
+    safe_p = guarded_pivot(p, buf.dtype)
+    pr = jnp.where(p == 0, jnp.zeros_like(row), row / safe_p)
+
+    # pivot column entries; zero at the pivot row so it is left untouched.
+    pc = buf[:, last]
+    pc = pc.at[t].set(0.0)
+    # Rows above t are dead; zero them too so the baseline buffer stays finite
+    # (cosmetic — they are never read again).
+    pc = jnp.where(jnp.arange(n) < t, 0.0, pc)
+
+    if update_fn is None:
+        buf = buf - jnp.outer(pc, pr)
+    else:
+        buf = update_fn(buf, pc, pr)
+
+    # sign bookkeeping: pivot sign, column swap, and Laplace expansion of the
+    # pivot (active row 0, active column m-1) => (-1)^(m-1).
+    parity = jnp.where((m - 1) % 2 == 0, 1.0, -1.0).astype(buf.dtype)
+    sign = sign * jnp.sign(p) * swap_sign * parity
+    logdet = logdet + jnp.log(jnp.abs(p))
+    return buf, sign, logdet
+
+
+def condense_steps(buf: jax.Array, n_steps: int, *, t0: int = 0,
+                   update_fn=None):
+    """Run ``n_steps`` condensation steps starting at step offset ``t0``.
+
+    Returns (buf, sign, logdet) with sign/logdet the *contribution* of these
+    steps (combine with `combine_slogdet`).
+    """
+    n = buf.shape[0]
+
+    def body(t, carry):
+        b, s, ld = carry
+        return _condense_step(b, t, n, s, ld, update_fn=update_fn)
+
+    # Derive the initial sign/logdet carries from `buf` so they inherit its
+    # varying-manual-axes type when called inside shard_map (tail solve).
+    zero = buf[0, 0] * 0
+    return lax.fori_loop(t0, t0 + n_steps, body, (buf, zero + 1, zero))
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def condense_full(a: jax.Array, *, use_kernel=False):
+    """Full serial rank-1 condensation — (sign, logabsdet).
+
+    The faithful baseline (legacy `slogdet_condense`): every step updates
+    the full static buffer.  ``use_kernel=True`` forces the Pallas rank-1
+    kernel body (interpret mode off-TPU) regardless of the backend probe;
+    a backend string ("pallas" | "interpret") pins it exactly.
+    """
+    n = a.shape[0]
+    if a.ndim != 2 or a.shape[1] != n:
+        raise ValueError(f"expected square matrix, got {a.shape}")
+    if n == 0:
+        return jnp.ones((), a.dtype), jnp.zeros((), a.dtype)
+    if n == 1:
+        return jnp.sign(a[0, 0]), jnp.log(jnp.abs(a[0, 0]))
+
+    update_fn = None
+    req = _kernel_request(use_kernel)
+    if req is not None:
+        from repro.kernels import ops as _kops
+        update_fn = functools.partial(_kops.rank1_update, backend=req)
+
+    buf, sign, logdet = condense_steps(a, n - 1, update_fn=update_fn)
+    p = buf[n - 1, 0]
+    return sign * jnp.sign(p), logdet + jnp.log(jnp.abs(p))
+
+
+# --------------------------------------------------------------------------
+# the panel (rank-K) primitives — THE shared implementation
+# --------------------------------------------------------------------------
+
+def panel_factor(panel: jax.Array, m0, *, r_pos=0, update_fn=None):
+    """Factorize a K-row condensation panel.
+
+    Args:
+      panel: (K, N) rows to eliminate (static shape; live cols are [0, m0)).
+      m0:    live column count before this panel (may be traced).
+      r_pos: number of live rows above the panel's rows in the global live
+             ordering (0 for the serial schedule; ``p*(L-(r+1)K)`` for the
+             round-robin parallel schedule) — used only for sign tracking.
+
+    Returns ``(R, ls, sign, logdet)``:
+      R:  (K, N) normalized pivot rows in the final (all-K-swaps) coordinates.
+      ls: (K,) pivot column index chosen at each step, *in the coordinates
+          current at that step* — consumers must replay the swaps in order.
+    """
+    K, N = panel.shape
+    dt = panel.dtype
+    cols = jnp.arange(N)
+
+    def body(k, carry):
+        buf, ls, sign, logdet = carry
+        m = m0 - k                       # live cols at this step
+        last = m - 1
+        row = buf[k]
+        absrow = jnp.where(cols < m, jnp.abs(row), -jnp.inf)
+        l = jnp.argmax(absrow)
+        pv = row[l]
+
+        # swap columns l <-> last across the whole panel buffer
+        cl = jnp.take(buf, l, axis=1)
+        clast = jnp.take(buf, last, axis=1)
+        buf = buf.at[:, l].set(clast)
+        buf = buf.at[:, last].set(cl)
+
+        # normalize the pivot row; store it back (it becomes R[k])
+        row = buf[k]
+        safe = guarded_pivot(pv, dt)
+        pr = jnp.where(pv == 0, jnp.zeros_like(row), row / safe)
+        pr = pr.at[last].set(jnp.where(pv == 0, pr[last], 1.0))
+        buf = buf.at[k].set(pr)
+
+        # rank-1 update of the remaining panel rows (k+1..K-1)
+        pc = jnp.take(buf, last, axis=1)
+        pc = jnp.where(jnp.arange(K) <= k, 0.0, pc)
+        if update_fn is None:
+            buf = buf - jnp.outer(pc, pr)
+        else:
+            buf = update_fn(buf, pc, pr)
+
+        ls = ls.at[k].set(l.astype(ls.dtype))
+        parity = jnp.where((r_pos + m - 1) % 2 == 0, 1.0, -1.0).astype(dt)
+        swap_sign = jnp.where(l == last, 1.0, -1.0).astype(dt)
+        sign = sign * jnp.sign(pv) * swap_sign * parity
+        logdet = logdet + jnp.log(jnp.abs(pv))
+        return buf, ls, sign, logdet
+
+    zero = panel[0, 0] * 0
+    ls0 = jnp.zeros((K,), jnp.int32) + (zero * 0).astype(jnp.int32)
+    R, ls, sign, logdet = lax.fori_loop(
+        0, K, body, (panel, ls0, zero + 1, zero)
+    )
+    return R, ls, sign, logdet
+
+
+def apply_panel(block: jax.Array, R: jax.Array, ls: jax.Array, m0,
+                row_mask: jax.Array, *, gemm_fn=None):
+    """Apply a factorized panel to a trailing row block.
+
+    Args:
+      block:    (Lb, N) trailing rows (full static width).
+      R, ls:    panel factorization output (R in final coordinates).
+      m0:       live columns before the panel.
+      row_mask: (Lb,) 1.0 for rows that must be updated, 0.0 for dead/pivot rows.
+
+    Returns the updated block.  ``gemm_fn(block, C, R)`` may override the
+    final GEMM (Pallas kernel hook); default is ``block - C @ R``.
+    """
+    Lb, N = block.shape
+    K = R.shape[0]
+
+    # replay the K column swaps in order: swap ls[k] <-> (m0-1-k)
+    def swap_body(k, blk):
+        l = ls[k]
+        last = m0 - 1 - k
+        cl = jnp.take(blk, l, axis=1)
+        clast = jnp.take(blk, last, axis=1)
+        blk = blk.at[:, l].set(clast)
+        blk = blk.at[:, last].set(cl)
+        return blk
+
+    block = lax.fori_loop(0, K, swap_body, block)
+
+    # pivot-column block, reversed so column k corresponds to pivot k
+    pc_cols = lax.dynamic_slice(block, (0, m0 - K), (Lb, K))   # (Lb, K)
+    Pc = jnp.flip(pc_cols, axis=1)
+
+    # T[k', k] = R[k', pos(pivot k)] — unit upper-triangular in (k', k)
+    t_cols = lax.dynamic_slice(R, (0, m0 - K), (K, K))
+    T = jnp.flip(t_cols, axis=1)
+
+    # C @ T = Pc  =>  T^T C^T = Pc^T (T^T lower, unit diagonal)
+    Ct = jax.scipy.linalg.solve_triangular(
+        T, Pc.T, trans="T", lower=False, unit_diagonal=True
+    )
+    C = Ct.T * row_mask[:, None]
+
+    if gemm_fn is None:
+        return block - C @ R
+    return gemm_fn(block, C, R)
+
+
+def _kernel_request(use_kernel) -> Optional[str]:
+    """Normalize a driver's ``use_kernel`` argument to a backend request.
+
+    ``False``/``None`` -> None (inline jnp); ``True`` -> "pallas" (the
+    historical explicit-kernel spelling; off-TPU it degrades to the
+    interpreter inside kernels.ops); a string passes through verbatim so
+    an "interpret" config is honored even on TPU.
+    """
+    if not use_kernel:
+        return None
+    return "pallas" if use_kernel is True else use_kernel
+
+
+def panel_factor_dispatch(use_kernel):
+    """The panel-factorization hook for a backend choice.
+
+    A truthy ``use_kernel`` (True or a backend string) routes full panels
+    through the VMEM-resident Pallas kernel (`kernels.ops
+    .panel_factor_vmem`, §Perf P0/It3 — one HBM read + write per panel
+    instead of k) whenever the panel fits the VMEM budget; oversized
+    panels and the XLA backend use the shared jnp implementation.  Both
+    are bit-identical (asserted in test_kernels).
+    """
+    req = _kernel_request(use_kernel)
+    if req is None:
+        return lambda panel, m0, r_pos=0, update_fn=None: panel_factor(
+            panel, m0, r_pos=r_pos, update_fn=update_fn)
+
+    def factor(panel, m0, r_pos=0, update_fn=None):
+        from repro.kernels import ops as _kops
+        from repro.kernels.panel_factor import VMEM_BUDGET
+        k, n = panel.shape
+        if k * n * panel.dtype.itemsize <= VMEM_BUDGET:
+            return _kops.panel_factor_vmem(panel, m0, r_pos, backend=req)
+        return panel_factor(panel, m0, r_pos=r_pos, update_fn=update_fn)
+
+    return factor
+
+
+def panel_rounds_serial(buf: jax.Array, n_panels: int, k: int, *,
+                        q0: int = 0, gemm_fn=None, update_fn=None,
+                        factor_fn=None):
+    """Run ``n_panels`` serial K-panels starting at panel offset ``q0``.
+
+    The serial-schedule panel loop shared by the blocked driver and the
+    staged x panel stages.  Returns (buf, sign, logdet) contributions.
+    """
+    n = buf.shape[0]
+    rows = jnp.arange(n)
+    if factor_fn is None:
+        factor_fn = panel_factor_dispatch(False)
+
+    def body(q, carry):
+        b, sign, logdet = carry
+        t0 = q * k
+        m0 = n - t0
+        panel = lax.dynamic_slice(b, (t0, 0), (k, n))
+        R, ls, psign, plogdet = factor_fn(panel, m0, update_fn=update_fn)
+        row_mask = (rows >= t0 + k).astype(b.dtype)
+        b = apply_panel(b, R, ls, m0, row_mask, gemm_fn=gemm_fn)
+        # park the factorized rows back so dead region stays finite
+        b = lax.dynamic_update_slice(b, R, (t0, 0))
+        return b, sign * psign, logdet + plogdet
+
+    zero = buf[0, 0] * 0
+    return lax.fori_loop(q0, q0 + n_panels, body, (buf, zero + 1, zero))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "use_kernel"))
+def blocked_full(a: jax.Array, *, k: int = 32, use_kernel=False):
+    """Serial blocked condensation: panels of ``k`` rows, rank-k GEMMs.
+
+    Numerically equivalent to `condense_full` up to roundoff; exercises the
+    exact panel/trailing structure used by the mesh x panel variant.
+    """
+    n = a.shape[0]
+    if a.ndim != 2 or a.shape[1] != n:
+        raise ValueError(f"expected square matrix, got {a.shape}")
+    if n <= k:
+        return condense_full(a, use_kernel=use_kernel)
+
+    gemm_fn = None
+    req = _kernel_request(use_kernel)
+    if req is not None:
+        from repro.kernels import ops as _kops
+        gemm_fn = functools.partial(_kops.panel_update, backend=req)
+
+    n_panels = (n - 1) // k
+    buf, sign, logdet = panel_rounds_serial(
+        a, n_panels, k, gemm_fn=gemm_fn,
+        factor_fn=panel_factor_dispatch(use_kernel))
+
+    # remainder: rank-1 steps from t0 = n_panels*k to n-2, then the 1x1 tail
+    t0 = n_panels * k
+    buf, rsign, rlogdet = condense_steps(buf, n - 1 - t0, t0=t0)
+    p = buf[n - 1, 0]
+    return (sign * rsign * jnp.sign(p),
+            logdet + rlogdet + jnp.log(jnp.abs(p)))
+
+
+# --------------------------------------------------------------------------
+# staged schedule (geometric re-jit over shrinking static shapes)
+# --------------------------------------------------------------------------
+
+def stage_schedule(n: int, shrink: float, min_size: int):
+    """Static (size, steps) schedule: run `steps` at static size `size`."""
+    sched = []
+    size = n
+    while size > min_size:
+        nxt = max(min_size, int(math.ceil(size * shrink)))
+        steps = size - nxt
+        if steps <= 0:
+            break
+        sched.append((size, steps))
+        size = nxt
+    sched.append((size, size - 1))  # finish to 1x1
+    return sched
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def _staged_stage_rank1(buf, steps: int):
+    b, s, ld = condense_steps(buf, steps)
+    n = buf.shape[0]
+    live = lax.slice(b, (steps, 0), (n, n - steps))
+    return live, s, ld
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "k", "use_kernel"))
+def _staged_stage_panel(buf, steps: int, k: int, use_kernel=False):
+    """One staged stage eliminating ``steps`` rows via K-panels + remainder."""
+    gemm_fn = None
+    req = _kernel_request(use_kernel)
+    if req is not None:
+        from repro.kernels import ops as _kops
+        gemm_fn = functools.partial(_kops.panel_update, backend=req)
+    n = buf.shape[0]
+    n_panels = steps // k
+    b, s, ld = panel_rounds_serial(
+        buf, n_panels, k, gemm_fn=gemm_fn,
+        factor_fn=panel_factor_dispatch(use_kernel))
+    rem = steps - n_panels * k
+    if rem > 0:
+        b, rs, rld = condense_steps(b, rem, t0=n_panels * k)
+        s, ld = s * rs, ld + rld
+    live = lax.slice(b, (steps, 0), (n, n - steps))
+    return live, s, ld
+
+
+def staged_full(a: jax.Array, *, shrink: float = 0.75, min_size: int = 64,
+                update: str = "rank1", k: int = 32,
+                use_kernel=False):
+    """Geometric shape-staged condensation (§Perf optimization 1).
+
+    Runs condensation in stages of static shape, slicing out the live prefix
+    between stages.  FLOP waste drops from ~3x (full static buffer) to ~1.5x
+    with shrink=0.75 at the cost of a handful of compilations.  With
+    ``update="panel"`` each stage runs rank-K panels (MXU GEMMs) instead of
+    rank-1 steps — the schedule x update combination no legacy route named.
+    """
+    n = a.shape[0]
+    if n <= min_size:
+        if update == "panel" and n > k:
+            return blocked_full(a, k=k, use_kernel=use_kernel)
+        return condense_full(a, use_kernel=use_kernel)
+    parts = []
+    buf = a
+    for size, steps in stage_schedule(n, shrink, min_size):
+        if buf.shape[0] != size:  # defensive; schedule and buffer must agree
+            raise AssertionError((buf.shape, size))
+        if size - steps <= 1:
+            if update == "panel" and size > k:
+                parts.append(blocked_full(buf, k=k, use_kernel=use_kernel))
+            else:
+                parts.append(condense_full(buf, use_kernel=use_kernel))
+            buf = None
+            break
+        if update == "panel" and steps >= k:
+            buf, s, ld = _staged_stage_panel(buf, steps, k, use_kernel)
+        else:
+            buf, s, ld = _staged_stage_rank1(buf, steps)
+        parts.append((s, ld))
+    if buf is not None:
+        if update == "panel" and buf.shape[0] > k:
+            parts.append(blocked_full(buf, k=k, use_kernel=use_kernel))
+        else:
+            parts.append(condense_full(buf, use_kernel=use_kernel))
+    return combine_slogdet(parts)
+
+
+# --------------------------------------------------------------------------
+# mesh schedule (round-robin block rows, shard_map)
+# --------------------------------------------------------------------------
+
+def mc_step_fn(axis_name: str, *, update_fn=None):
+    """Per-global-step body of parallel MC for use inside shard_map.
+
+    ``local`` has shape (L, N) — the device's contiguous row block.  Global
+    step ``t`` maps to (round ``i = t // P``, owner ``p = t % P``); the owner
+    eliminates its local row ``i``.  Returns ``step(t, carry)`` with carry
+    ``(local, sign, logdet)`` where sign/logdet are *per-device partial*
+    contributions (combine with psum / product at the end, paper step 6).
+    """
+
+    def step(t, carry):
+        local, sign, logdet = carry
+        L, N = local.shape
+        P = _axis_size(axis_name)
+        me = lax.axis_index(axis_name)
+        i = t // P                            # round = owner's local row index
+        p = t % P                             # owner device
+        m = N - t                             # live column count
+        last = m - 1                          # post-swap pivot column
+        mine = me == p
+
+        # ---- owner: local pivot choice + row normalization (no comm) -------
+        row = local[i]
+        live_col = jnp.arange(N) < m
+        absrow = jnp.where(live_col, jnp.abs(row), -jnp.inf)
+        l = jnp.argmax(absrow)
+        pv = row[l]
+        # swap l <-> last inside the pivot row, normalize so pr[last] == 1
+        rl, rlast = row[l], row[last]
+        row = row.at[l].set(rlast).at[last].set(pv)
+        safe = guarded_pivot(pv, local.dtype)
+        pr = jnp.where(pv == 0, jnp.zeros_like(row), row / safe)
+        pr = pr.at[last].set(jnp.where(pv == 0, pr[last], 1.0))
+
+        # ---- broadcast: ONE collective for (normalized row, column index) ---
+        pr_b, l_b = lax.psum(
+            (jnp.where(mine, pr, jnp.zeros_like(pr)),
+             jnp.where(mine, l, jnp.zeros_like(l))),
+            axis_name,
+        )
+
+        # ---- every device: column swap l_b <-> last on its block ------------
+        cl = jnp.take(local, l_b, axis=1)
+        clast = jnp.take(local, last, axis=1)
+        local = local.at[:, l_b].set(clast)
+        local = local.at[:, last].set(cl)
+
+        # ---- rank-1 condensation update on live rows -------------------------
+        pc = jnp.take(local, last, axis=1)
+        dead = i + (me <= p)                  # rows [0, dead) are retired
+        pc = jnp.where(jnp.arange(L) < dead, 0.0, pc)
+        if update_fn is None:
+            local = local - jnp.outer(pc, pr_b)
+        else:
+            local = update_fn(local, pc, pr_b)
+
+        # ---- owner accumulates its logdet/sign contribution ------------------
+        r_pos = p * (L - 1 - i)               # live rows above the pivot row
+        parity = jnp.where((r_pos + m - 1) % 2 == 0, 1.0, -1.0).astype(local.dtype)
+        swap_sign = jnp.where(l == last, 1.0, -1.0).astype(local.dtype)
+        step_sign = jnp.sign(pv) * swap_sign * parity
+        sign = jnp.where(mine, sign * step_sign, sign)
+        logdet = logdet + jnp.where(mine, jnp.log(jnp.abs(pv)), 0.0)
+        return local, sign, logdet
+
+    return step
+
+
+def mc_local_phase(local, axis_name: str, *, t0: int = 0,
+                   n_steps: int | None = None, update_fn=None):
+    """Run the distributed condensation phase; local block (L, N).
+
+    Returns (local, sign_partial, logdet_partial) after ``n_steps`` global
+    steps starting at ``t0`` (default: the full ``(L-1)*P`` schedule).
+    """
+    L, N = local.shape
+    P = _axis_size(axis_name)
+    if n_steps is None:
+        n_steps = (L - 1) * P - t0
+    step = mc_step_fn(axis_name, update_fn=update_fn)
+    sign0 = _pvary(jnp.ones((), local.dtype), axis_name)
+    ld0 = _pvary(jnp.zeros((), local.dtype), axis_name)
+    return lax.fori_loop(t0, t0 + n_steps, step, (local, sign0, ld0))
+
+
+def mesh_tail(local, sign, logdet, axis_name: str):
+    """The shared P x P tail reduction (paper pseudocode steps 5-8).
+
+    Each device holds ONE live row (its last); ``all_gather`` forms the
+    final P x P matrix, the tail slogdet runs redundantly on every device
+    (cheaper than gather-to-master + scalar scatter on TPU), and the
+    per-device partial (sign, logdet) contributions combine via
+    psum / all_gather-product.  Returns per-device (1,) outputs for the
+    shard_map out_specs.
+    """
+    L, N = local.shape
+    P = _axis_size(axis_name)
+    live = lax.dynamic_slice(local, (L - 1, 0), (1, N))[0, :]
+    tail = lax.all_gather(live, axis_name)          # (P, N): device-ordered
+    tail = lax.slice(tail, (0, 0), (P, P))          # live cols are prefix
+    tsign, tlogdet = condense_full(tail)            # redundant on all devs
+
+    logdet_total = lax.psum(logdet, axis_name) + tlogdet
+    signs = lax.all_gather(sign, axis_name)
+    sign_total = jnp.prod(signs) * tsign
+    return sign_total.reshape(1), logdet_total.reshape(1)
+
+
+def _mesh_rank1_kernel(axis_name: str, update_fn=None):
+    def kernel(local):
+        local, sign, logdet = mc_local_phase(local, axis_name,
+                                             update_fn=update_fn)
+        return mesh_tail(local, sign, logdet, axis_name)
+
+    return kernel
+
+
+def _mesh_panel_kernel(axis_name: str, k: int, *, gemm_fn=None,
+                       update_fn=None, factor_fn=None):
+    """Round-robin K-panel mesh kernel.
+
+    Device ``p`` factorizes panels of ``k`` of its own rows (keeping MC's
+    local pivoting — still no global pivot search), broadcasts ``(R, ls)``
+    once per panel, and every device applies the rank-k GEMM to its live
+    rows.  Remainder rows use the rank-1 schedule; the final P x P tail is
+    gathered and solved redundantly (`mesh_tail`).
+    """
+
+    if factor_fn is None:
+        factor_fn = panel_factor_dispatch(False)
+
+    def kernel(local):
+        L, N = local.shape
+        P = _axis_size(axis_name)
+        me = lax.axis_index(axis_name)
+        n_rounds = (L - 1) // k
+        lrow = jnp.arange(L)
+        zero = local[0, 0] * 0
+
+        def panel_step(g, carry):
+            """Global panel index g = r*P + p."""
+            local, sign, logdet = carry
+            r = g // P
+            p = g % P
+            t0 = g * k
+            m0 = N - t0
+            mine = me == p
+
+            panel = lax.dynamic_slice(local, (r * k, 0), (k, N))
+            r_pos = p * (L - (r + 1) * k)
+            R, ls, psign, plogdet = factor_fn(panel, m0, r_pos=r_pos,
+                                              update_fn=update_fn)
+
+            R_b, ls_b = lax.psum(
+                (jnp.where(mine, R, jnp.zeros_like(R)),
+                 jnp.where(mine, ls, jnp.zeros_like(ls))),
+                axis_name,
+            )
+
+            dead = jnp.where(me <= p, (r + 1) * k, r * k)
+            row_mask = (lrow >= dead).astype(local.dtype)
+            local = apply_panel(local, R_b, ls_b, m0, row_mask,
+                                gemm_fn=gemm_fn)
+
+            sign = jnp.where(mine, sign * psign, sign)
+            logdet = logdet + jnp.where(mine, plogdet, zero)
+            return local, sign, logdet
+
+        carry = (local, zero + 1, zero)
+        if n_rounds > 0:  # static: L, k known at trace time
+            carry = lax.fori_loop(0, n_rounds * P, panel_step, carry)
+        local, sign, logdet = carry
+
+        # remainder rows: rank-1 schedule continuing at t = n_rounds*k per dev
+        rem = (L - 1) - n_rounds * k
+        if rem > 0:
+            step = mc_step_fn(axis_name, update_fn=update_fn)
+            t_start = n_rounds * k * P
+            local, rsign, rlogdet = lax.fori_loop(
+                t_start, t_start + rem * P, step, (local, zero + 1, zero))
+            sign = sign * rsign
+            logdet = logdet + rlogdet
+
+        return mesh_tail(local, sign, logdet, axis_name)
+
+    return kernel
+
+
+# --------------------------------------------------------------------------
+# engine builders — the single entry points every route resolves to
+# --------------------------------------------------------------------------
+
+def build_serial(cfg: EngineConfig) -> Callable:
+    """``a -> (sign, logabsdet)`` for the serial / staged schedules."""
+    if cfg.schedule == "mesh":
+        raise ValueError("mesh schedule needs build_mesh(cfg, mesh)")
+    rb = resolve_backend(cfg.backend)
+    # drivers take the exact backend string so "interpret" is honored
+    # even on TPU (False == inline jnp, same as the xla hooks)
+    use_kernel = False if rb == "xla" else rb
+
+    if cfg.schedule == "serial":
+        if cfg.update == "rank1":
+            return lambda a: condense_full(a, use_kernel=use_kernel)
+        k = cfg.panel_k
+        return lambda a: blocked_full(a, k=k, use_kernel=use_kernel)
+
+    # staged
+    return lambda a: staged_full(
+        a, shrink=cfg.shrink, min_size=cfg.min_size, update=cfg.update,
+        k=cfg.panel_k, use_kernel=use_kernel)
+
+
+def build_mesh(cfg: EngineConfig, mesh, axis_name: str = "rows", *,
+               update_fn=None, gemm_fn=None) -> Callable:
+    """``a -> (sign, logabsdet)`` over a 1-D device mesh.
+
+    ``update_fn`` / ``gemm_fn`` override the backend hooks (benchmark /
+    test injection); by default they resolve from ``cfg.backend``.
+    """
+    if cfg.schedule != "mesh":
+        raise ValueError(f"build_mesh needs schedule='mesh', got {cfg.schedule!r}")
+    nproc = int(mesh.shape[axis_name])
+    factor_fn = None
+    if update_fn is None and gemm_fn is None:
+        update_fn, gemm_fn = _hooks(cfg.backend)
+        if gemm_fn is not None:
+            factor_fn = panel_factor_dispatch(resolve_backend(cfg.backend))
+
+    if cfg.update == "rank1":
+        kernel = _mesh_rank1_kernel(axis_name, update_fn=update_fn)
+    else:
+        kernel = _mesh_panel_kernel(axis_name, cfg.panel_k,
+                                    gemm_fn=gemm_fn, update_fn=update_fn,
+                                    factor_fn=factor_fn)
+
+    shmapped = _shard_map(
+        kernel,
+        mesh=mesh,
+        in_specs=(PartitionSpec(axis_name, None),),
+        out_specs=(PartitionSpec(axis_name), PartitionSpec(axis_name)),
+    )
+
+    @jax.jit
+    def run(a):
+        n = a.shape[0]
+        if n % nproc:
+            raise ValueError(f"N={n} not divisible by mesh size {nproc}")
+        sign, logdet = shmapped(a)
+        return sign[0], logdet[0]
+
+    return run
+
+
+def engine_slogdet(a: jax.Array, cfg: EngineConfig = EngineConfig(), *,
+                   mesh=None, axis_name: str = "rows"):
+    """One-shot engine execution (tests / benchmarks / exploration).
+
+    Production code should build once via `build_serial` / `build_mesh`
+    (or, better, `repro.plan(..., method="exact", ...)`) and reuse.
+    """
+    if cfg.schedule == "mesh":
+        if mesh is None:
+            raise ValueError("mesh schedule requires a mesh")
+        return build_mesh(cfg, mesh, axis_name)(a)
+    return build_serial(cfg)(a)

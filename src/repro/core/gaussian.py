@@ -25,6 +25,9 @@ from jax import lax
 
 from repro._compat import (axis_size as _axis_size, pvary as _pvary,
                            shard_map as _shard_map)
+# GE stays a separate algorithm family (the paper's comparison baseline),
+# but the sign/permutation helpers are the engine's shared ones
+from repro.core.engine import cyclic_perm, guarded_pivot, perm_parity
 
 __all__ = ["slogdet_ge", "parallel_slogdet_ge", "ge_step_fn", "cyclic_perm", "perm_parity"]
 
@@ -60,7 +63,7 @@ def slogdet_ge(a: jax.Array):
         sign = sign * jnp.where(r == t, 1.0, -1.0).astype(a.dtype)
 
         pr = buf[t]                                   # pivot row (unnormalized)
-        safe_p = jnp.where(p == 0, jnp.ones((), a.dtype), p)
+        safe_p = guarded_pivot(p, a.dtype)
         factor = jnp.where(rows > t, jnp.take(buf, t, axis=1) / safe_p, 0.0)
         buf = buf - factor[:, None] * pr[None, :]
 
@@ -72,29 +75,6 @@ def slogdet_ge(a: jax.Array):
         0, n, body, (a, jnp.ones((), a.dtype), jnp.zeros((), a.dtype))
     )
     return sign, logdet
-
-
-def cyclic_perm(n: int, p: int) -> np.ndarray:
-    """Permutation mapping block layout to cyclic: out[d*L + i] = i*p + d."""
-    return np.arange(n).reshape(n // p, p).T.reshape(-1)
-
-
-def perm_parity(perm: np.ndarray) -> float:
-    """Parity (+1/-1) of a permutation via cycle decomposition (O(n))."""
-    seen = np.zeros(len(perm), dtype=bool)
-    parity = 1.0
-    for start in range(len(perm)):
-        if seen[start]:
-            continue
-        clen = 0
-        j = start
-        while not seen[j]:
-            seen[j] = True
-            j = int(perm[j])
-            clen += 1
-        if clen % 2 == 0:
-            parity = -parity
-    return parity
 
 
 def ge_step_fn(axis_name: str):
@@ -145,7 +125,7 @@ def ge_step_fn(axis_name: str):
         local = local.at[li_p].set(new_lp)
 
         # ---- 4. elimination on my rows with global index > t ----------------
-        safe_p = jnp.where(p == 0, jnp.ones((), local.dtype), p)
+        safe_p = guarded_pivot(p, local.dtype)
         factor = jnp.where(grow > t, jnp.take(local, t, axis=1) / safe_p, 0.0)
         local = local - factor[:, None] * pivot_row[None, :]
 

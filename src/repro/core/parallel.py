@@ -1,182 +1,42 @@
-"""Parallel Matrix Condensation (the paper's contribution), in shard_map.
+"""Parallel Matrix Condensation (the paper's contribution) — engine routes.
 
-Schedule (paper §2.1, Fig. 2 + pseudocode Fig. 6):
+The per-step body (`mc_step_fn`), the distributed phase (`mc_local_phase`)
+and the shared P x P tail reduction now live in `repro.core.engine`; this
+module keeps the historical entry point `parallel_slogdet_mc` as a thin
+wrapper over the engine's ``(schedule="mesh", update="rank1")`` route.
 
-  * **Block row distribution**: device ``p`` owns the contiguous row block
-    ``[p*L, (p+1)*L)`` — cheap, contiguous scatter (the paper's data-
-    distribution win over GE's cyclic layout).
-  * Global step ``t = i*P + p``: device ``p`` eliminates *its own* local row
-    ``i``.  Arbitrary-pivot-row freedom (Eq. 2) is what makes this legal; each
-    round every device retires one local row, so block layout stays balanced.
-  * **Local pivoting** (§2.2–2.3): the owner picks the pivot column as
-    ``argmax |row|`` over live columns, factors the pivot out of the row
-    *locally*, and broadcasts the normalized row.  No global pivot search, no
-    row exchange — the communication GE cannot avoid.
-  * **Column swap** (§2.4): pivot column <-> last live column, applied
-    redundantly by every device, keeps the live region a contiguous static-
-    shape prefix (XLA-friendly analogue of the paper's cache-contiguity trick).
-  * Tail (pseudocode steps 5–8): after ``(L-1)*P`` steps, each device holds one
-    live row; ``all_gather`` forms the final ``P x P`` matrix, and the tail
-    slogdet is computed redundantly on every device (on TPU this is cheaper
-    than a real gather-to-master + scalar scatter).
+Schedule (paper §2.1, Fig. 2 + pseudocode Fig. 6): block row distribution
+(device ``p`` owns rows ``[p*L, (p+1)*L)``), global step ``t = i*P + p``
+eliminates device ``p``'s local row ``i`` (arbitrary-pivot-row freedom,
+Eq. 2), local pivoting + ONE broadcast per step (the normalized pivot row
+and its column index), redundant §2.4 column swaps, and an all-gathered
+P x P tail solved redundantly on every device.  Compare GE
+(core/gaussian.py): argmax all-reduce + two row broadcasts per step.
 
-Communication per step: **one** ``psum`` carrying the normalized pivot row and
-its column index.  Compare GE (core/gaussian.py): argmax all-reduce + two row
-broadcasts per step.
-
-Sign is tracked exactly (paper tracks only |det|): each step contributes
-``sign(pivot) * swap_sign * (-1)^(r_pos + m - 1)`` where ``r_pos`` is the
-number of live rows above the pivot row (closed form ``p*(L-1-i)`` for this
-schedule) and ``m-1`` is the pivot's live column position after the swap.
+Sign is tracked exactly (the paper tracks only |det|): each step
+contributes ``sign(pivot) * swap_sign * (-1)^(r_pos + m - 1)`` where
+``r_pos`` is the number of live rows above the pivot row (closed form
+``p*(L-1-i)`` for this schedule).
 """
 from __future__ import annotations
 
-import functools
-
-import numpy as np
-
-import jax
-import jax.numpy as jnp
-from jax import lax
-from jax.sharding import PartitionSpec
-
-from repro._compat import (axis_size as _axis_size, pvary as _pvary,
-                           shard_map as _shard_map)
-from repro.core.condense import slogdet_condense
+from repro.core.engine import (
+    EngineConfig,
+    build_mesh,
+    mc_local_phase,
+    mc_step_fn,
+)
 
 __all__ = ["parallel_slogdet_mc", "mc_step_fn", "mc_local_phase"]
-
-
-def mc_step_fn(axis_name: str, *, update_fn=None):
-    """Per-global-step body of parallel MC for use inside shard_map.
-
-    ``local`` has shape (L, N) — the device's contiguous row block.  Global
-    step ``t`` maps to (round ``i = t // P``, owner ``p = t % P``); the owner
-    eliminates its local row ``i``.  Returns ``step(t, carry)`` with carry
-    ``(local, sign, logdet)`` where sign/logdet are *per-device partial*
-    contributions (combine with psum / product at the end, paper step 6).
-    """
-
-    def step(t, carry):
-        local, sign, logdet = carry
-        L, N = local.shape
-        P = _axis_size(axis_name)
-        me = lax.axis_index(axis_name)
-        i = t // P                            # round = owner's local row index
-        p = t % P                             # owner device
-        m = N - t                             # live column count
-        last = m - 1                          # post-swap pivot column
-        mine = me == p
-
-        # ---- owner: local pivot choice + row normalization (no comm) -------
-        row = local[i]
-        live_col = jnp.arange(N) < m
-        absrow = jnp.where(live_col, jnp.abs(row), -jnp.inf)
-        l = jnp.argmax(absrow)
-        pv = row[l]
-        # swap l <-> last inside the pivot row, normalize so pr[last] == 1
-        rl, rlast = row[l], row[last]
-        row = row.at[l].set(rlast).at[last].set(pv)
-        safe = jnp.where(pv == 0, jnp.ones((), local.dtype), pv)
-        pr = jnp.where(pv == 0, jnp.zeros_like(row), row / safe)
-        pr = pr.at[last].set(jnp.where(pv == 0, pr[last], 1.0))
-
-        # ---- broadcast: ONE collective for (normalized row, column index) ---
-        pr_b, l_b = lax.psum(
-            (jnp.where(mine, pr, jnp.zeros_like(pr)),
-             jnp.where(mine, l, jnp.zeros_like(l))),
-            axis_name,
-        )
-
-        # ---- every device: column swap l_b <-> last on its block ------------
-        cl = jnp.take(local, l_b, axis=1)
-        clast = jnp.take(local, last, axis=1)
-        local = local.at[:, l_b].set(clast)
-        local = local.at[:, last].set(cl)
-
-        # ---- rank-1 condensation update on live rows -------------------------
-        pc = jnp.take(local, last, axis=1)
-        dead = i + (me <= p)                  # rows [0, dead) are retired
-        pc = jnp.where(jnp.arange(L) < dead, 0.0, pc)
-        if update_fn is None:
-            local = local - jnp.outer(pc, pr_b)
-        else:
-            local = update_fn(local, pc, pr_b)
-
-        # ---- owner accumulates its logdet/sign contribution ------------------
-        r_pos = p * (L - 1 - i)               # live rows above the pivot row
-        parity = jnp.where((r_pos + m - 1) % 2 == 0, 1.0, -1.0).astype(local.dtype)
-        swap_sign = jnp.where(l == last, 1.0, -1.0).astype(local.dtype)
-        step_sign = jnp.sign(pv) * swap_sign * parity
-        sign = jnp.where(mine, sign * step_sign, sign)
-        logdet = logdet + jnp.where(mine, jnp.log(jnp.abs(pv)), 0.0)
-        return local, sign, logdet
-
-    return step
-
-
-def mc_local_phase(local, axis_name: str, *, t0: int = 0, n_steps: int | None = None,
-                   update_fn=None):
-    """Run the distributed condensation phase; local block (L, N).
-
-    Returns (local, sign_partial, logdet_partial) after ``n_steps`` global
-    steps starting at ``t0`` (default: the full ``(L-1)*P`` schedule).
-    """
-    L, N = local.shape
-    P = _axis_size(axis_name)
-    if n_steps is None:
-        n_steps = (L - 1) * P - t0
-    step = mc_step_fn(axis_name, update_fn=update_fn)
-    sign0 = _pvary(jnp.ones((), local.dtype), axis_name)
-    ld0 = _pvary(jnp.zeros((), local.dtype), axis_name)
-    return lax.fori_loop(t0, t0 + n_steps, step, (local, sign0, ld0))
-
-
-def _mc_kernel(axis_name: str, update_fn=None):
-    def kernel(local):
-        L, N = local.shape
-        P = _axis_size(axis_name)
-        local, sign, logdet = mc_local_phase(local, axis_name, update_fn=update_fn)
-
-        # ---- tail: gather the P live rows (one per device) -------------------
-        live = lax.dynamic_slice(local, (L - 1, 0), (1, N))[0, :]
-        tail = lax.all_gather(live, axis_name)          # (P, N): device-ordered
-        tail = lax.slice(tail, (0, 0), (P, P))          # live cols are prefix
-        tsign, tlogdet = slogdet_condense(tail)         # redundant on all devs
-
-        # combine per-device partials (paper step 6: reduce)
-        logdet_total = lax.psum(logdet, axis_name) + tlogdet
-        signs = lax.all_gather(sign, axis_name)
-        sign_total = jnp.prod(signs) * tsign
-        return sign_total.reshape(1), logdet_total.reshape(1)
-
-    return kernel
 
 
 def parallel_slogdet_mc(mesh, axis_name: str = "rows", *, update_fn=None):
     """Parallel Matrix Condensation logdet over a 1-D device mesh.
 
-    Returns a function ``f(a) -> (sign, logabsdet)`` for an ``(N, N)`` matrix
-    with ``N`` divisible by the mesh size.  Rows are distributed in contiguous
-    blocks (the paper's preferred layout — cheap scatter, load-balanced thanks
-    to the arbitrary-pivot-row schedule).
+    Engine route ``(schedule="mesh", update="rank1")``.  Returns a function
+    ``f(a) -> (sign, logabsdet)`` for an ``(N, N)`` matrix with ``N``
+    divisible by the mesh size.  ``update_fn`` overrides the rank-1 update
+    hook (kernel injection for benchmarks/tests).
     """
-    nproc = int(mesh.shape[axis_name])
-    kernel = _mc_kernel(axis_name, update_fn=update_fn)
-
-    shmapped = _shard_map(
-        kernel,
-        mesh=mesh,
-        in_specs=(PartitionSpec(axis_name, None),),
-        out_specs=(PartitionSpec(axis_name), PartitionSpec(axis_name)),
-    )
-
-    @jax.jit
-    def run(a):
-        n = a.shape[0]
-        if n % nproc:
-            raise ValueError(f"N={n} not divisible by mesh size {nproc}")
-        sign, logdet = shmapped(a)
-        return sign[0], logdet[0]
-
-    return run
+    cfg = EngineConfig(schedule="mesh", update="rank1", backend="xla")
+    return build_mesh(cfg, mesh, axis_name, update_fn=update_fn)

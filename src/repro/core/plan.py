@@ -22,27 +22,31 @@ Every execution path returns the same `LogdetResult`; the legacy string
 API (``repro.core.slogdet`` / ``logdet_batched``) survives as deprecated
 shims over plans (see repro.core.api and docs/api.md for migration).
 
-The cost model (`select_method`)
---------------------------------
+The cost model (`select_route` / `select_method`)
+-------------------------------------------------
 Inputs: N (and batch), the operator's `plan_hints()` (per-column matvec
-FLOPs, materializability), the mesh device count, and the requested
-accuracy ``rtol``.  Decision tree:
+FLOPs, materializability), the mesh device count, the requested accuracy
+``rtol`` — and the **measured roofline calibration table**
+(repro.core.calibration: sustained GEMM FLOP/s, streaming bandwidth, and
+per-collective latency/bandwidth, produced by ``python -m
+benchmarks.roofline --calibrate``).  Decision tree:
 
   1. operator input                          -> estimator family
      (only the matrix-free estimators run through the operator
      protocol; exact condensation needs the dense array itself);
   2. ``rtol`` < 1e-3 (more digits than Monte-Carlo noise allows at sane
      probe budgets)                          -> exact family;
-  3. otherwise compare FLOPs: exact ~ (2/3) N^3 per matrix vs estimator
-     ~ (default probe x step budget) x matvec_flops; cheapest wins —
-     with default budgets the dense crossover sits near N ~ 2400 per
-     device, scaled by structure (Toeplitz/Kronecker/stencil matvecs pull
-     the crossover far down);
-  4. family -> concrete method: exact picks the parallel condensation
-     (``pmc``) on a mesh, vmapped ``mc`` for stacks, staged ``mc_staged``
-     serially; estimators pick ``chebyshev`` when spectral bounds are
-     already known (no bracketing power iterations needed), else ``slq``
-     (adapts to the spectrum, needs no bounds).
+  3. otherwise compare *modeled seconds* (not raw FLOPs): the best exact
+     engine route vs ``(probe x step budget) x matvec_flops`` priced on
+     the measured GEMM roofline; cheapest wins.  Because the mesh
+     communication term (per-step collective latency + payload bytes)
+     does not shrink with P, both the dense<->estimator and the
+     serial<->mesh crossovers move with device count;
+  4. family -> concrete route: the exact family resolves to an
+     `EngineConfig` *tuple* (schedule x update x backend — e.g. staged x
+     rank1 for small N, staged x panel once GEMMs amortize, mesh x panel
+     when collectives pay for themselves); estimators pick ``chebyshev``
+     when spectral bounds are already known, else ``slq``.
 """
 from __future__ import annotations
 
@@ -57,15 +61,19 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.calibration import (
+    Calibration, estimator_cost, exact_cost, load_calibration,
+)
 from repro.core.configs import (
     ChebyshevConfig, ESTIMATOR_METHODS, EXACT_METHODS, ExactConfig,
-    LogdetConfig, METHODS, PARALLEL_METHODS, SLQConfig, config_for,
-    filter_for_method as _filter_for_method, validate_config,
+    LEGACY_EXACT_ROUTES, LogdetConfig, METHODS, SLQConfig,
+    config_for, filter_for_method as _filter_for_method, validate_config,
 )
+from repro.core.engine import EngineConfig, LEGACY_ROUTES
 from repro.core.result import Diagnostics, LogdetResult
 
 __all__ = ["plan", "LogdetPlan", "ProblemSpec", "spec_of", "select_method",
-           "clear_plan_cache"]
+           "select_route", "clear_plan_cache"]
 
 # probe-budget the selector assumes when none is configured yet: the SLQ
 # defaults (bounds-free, the conservative estimator choice)
@@ -159,46 +167,97 @@ def spec_of(x, dtype=None) -> ProblemSpec:
 # cost model
 # --------------------------------------------------------------------------
 
-def select_method(x, *, mesh=None, axis_name: str = "rows",
-                  rtol: Optional[float] = None,
-                  bounds_known: bool = False,
-                  est_cols: Optional[int] = None) -> str:
-    """Resolve ``method="auto"``: the cheapest family that meets ``rtol``.
+# panel updates cannot amortize their triangular-solve bookkeeping below a
+# few panels' worth of rows; the selector only offers them above this
+_PANEL_MIN_N_FACTOR = 4
+_DEFAULT_PANEL_K = 32
+# below this modeled exact wall time there is nothing worth trading:
+# Monte-Carlo noise buys ~2-3 digits, so the estimator family only wins
+# when exact condensation is actually expensive
+_EXACT_FREE_SECONDS = 0.05
 
-    ``x`` is anything `spec_of` accepts; ``est_cols`` overrides the
-    default probe x step budget the estimator cost estimate assumes.  See
-    the module docstring for the decision tree; this function is pure and
-    cheap — call it directly to ask "what would the planner do" without
-    building a plan.
+
+def select_route(x, *, mesh=None, axis_name: str = "rows",
+                 rtol: Optional[float] = None,
+                 bounds_known: bool = False,
+                 est_cols: Optional[int] = None,
+                 calibration: Optional[Calibration] = None,
+                 ) -> Tuple[str, Optional[EngineConfig]]:
+    """Resolve ``method="auto"`` to a route **tuple**.
+
+    Returns ``(method, engine_config)``: the estimator methods carry
+    ``None`` (they have no engine axes); the exact family returns
+    ``("exact", EngineConfig(schedule, update, panel_k, backend))`` — the
+    cheapest engine instantiation under the measured calibration table
+    (`repro.core.calibration.load_calibration` unless ``calibration`` is
+    given).  Pure and cheap — call it directly to ask "what would the
+    planner do" without building a plan.
     """
     spec = spec_of(x)
     devices = int(mesh.shape[axis_name]) if mesh is not None \
         else spec.device_count
+    est_method = "chebyshev" if bounds_known else "slq"
 
     if spec.kind == "operator":
         # only the matrix-free estimators run on operator inputs (plan
-        # rejects exact methods for them), whatever the FLOP comparison
+        # rejects exact methods for them), whatever the cost comparison
         # says — `materializable` is advisory, not a dispatch route
-        return "chebyshev" if bounds_known else "slq"
+        return est_method, None
+
+    cal = calibration if calibration is not None else load_calibration()
+    itemsize = jnp.dtype(spec.dtype).itemsize
+    route, exact_t = _best_exact_route(spec, devices, cal, itemsize)
 
     if rtol is not None and rtol < _EST_RTOL_FLOOR:
-        return _exact_choice(spec, devices)
+        return "exact", route
 
     cols = est_cols if est_cols is not None \
         else _DEFAULT_EST_COLS + _BOUNDS_COLS
-    exact_flops = (2.0 / 3.0) * spec.n ** 3 / devices
-    est_flops = cols * spec.matvec_flops / devices
-    if exact_flops <= est_flops:
-        return _exact_choice(spec, devices)
-    return "chebyshev" if bounds_known else "slq"
+    est_t = estimator_cost(spec.n, cols, spec.matvec_flops, devices, cal,
+                           itemsize=itemsize, batch=spec.batch or 1)
+    # estimators trade digits (and the sign) for time: only leave the
+    # exact family when exact is both slow enough to care about AND
+    # modeled slower than the estimator budget
+    if exact_t <= _EXACT_FREE_SECONDS or exact_t <= est_t:
+        return "exact", route
+    return est_method, None
 
 
-def _exact_choice(spec: ProblemSpec, devices: int) -> str:
+def select_method(x, *, mesh=None, axis_name: str = "rows",
+                  rtol: Optional[float] = None,
+                  bounds_known: bool = False,
+                  est_cols: Optional[int] = None,
+                  calibration: Optional[Calibration] = None) -> str:
+    """The method name `select_route` resolves to (family-level answer)."""
+    return select_route(x, mesh=mesh, axis_name=axis_name, rtol=rtol,
+                        bounds_known=bounds_known, est_cols=est_cols,
+                        calibration=calibration)[0]
+
+
+def _best_exact_route(spec: ProblemSpec, devices: int, cal: Calibration,
+                      itemsize: int) -> Tuple[EngineConfig, float]:
+    """Cheapest exact engine instantiation under the calibration table."""
+    n, b = spec.n, spec.batch or 1
     if spec.batch is not None:
-        return "mc"               # vmapped serial condensation per matrix
-    if devices > 1:
-        return "pmc"              # the paper's parallel condensation
-    return "mc_staged"            # fastest serial variant (geometric stages)
+        # stacks run one matrix per device (vmapped serial schedule)
+        candidates = [("serial", "rank1", 1), ("serial", "panel", 1)]
+    else:
+        candidates = [("staged", "rank1", 1), ("staged", "panel", 1)]
+        if devices > 1:
+            candidates += [("mesh", "rank1", devices),
+                           ("mesh", "panel", devices)]
+    if n < _PANEL_MIN_N_FACTOR * _DEFAULT_PANEL_K:
+        candidates = [c for c in candidates if c[1] != "panel"]
+    best = min(
+        candidates,
+        key=lambda c: exact_cost(n, c[2], cal, update=c[1],
+                                 panel_k=_DEFAULT_PANEL_K,
+                                 itemsize=itemsize, batch=b))
+    schedule, update, devs = best
+    cost = exact_cost(n, devs, cal, update=update,
+                      panel_k=_DEFAULT_PANEL_K, itemsize=itemsize, batch=b)
+    return EngineConfig(schedule=schedule, update=update,
+                        panel_k=_DEFAULT_PANEL_K), cost
 
 
 def _flops_est(method: str, spec: ProblemSpec, cfg: LogdetConfig,
@@ -220,21 +279,28 @@ def _flops_est(method: str, spec: ProblemSpec, cfg: LogdetConfig,
 # execution builders
 # --------------------------------------------------------------------------
 
+def _is_mesh_exact(method: str, cfg: LogdetConfig) -> bool:
+    """Does this exact method distribute one matrix over a mesh?"""
+    if method in ("pge", "plu"):
+        return True
+    return (method == "exact" and isinstance(cfg, ExactConfig)
+            and cfg.schedule == "mesh")
+
+
 def _serial_exact_core(method: str, cfg: ExactConfig) -> Callable:
-    from repro.core import blocked as _blocked
-    from repro.core import condense as _condense
+    from repro.core import engine as _engine
     from repro.core import gaussian as _gaussian
     from repro.core.api import pad_to_multiple
-    if method == "mc":
-        return _condense.slogdet_condense
-    if method == "mc_staged":
-        return _condense.slogdet_condense_staged
-    if method == "mc_blocked":
-        k = cfg.k
-        return lambda x: _blocked.slogdet_condense_blocked(
-            pad_to_multiple(x, k), k=k)
     if method == "ge":
         return _gaussian.slogdet_ge
+    if method == "exact":
+        ecfg = cfg.engine_config()
+        fn = _engine.build_serial(ecfg)
+        if ecfg.update == "panel":
+            # pad so every panel is full; diag(A, I) preserves the result
+            k = ecfg.panel_k
+            return lambda x: fn(pad_to_multiple(x, k))
+        return fn
     raise AssertionError(method)
 
 
@@ -244,22 +310,22 @@ def _serial_exact_core(method: str, cfg: ExactConfig) -> Callable:
 _KERNEL_CACHE: dict = {}
 
 
-def _parallel_kernel(method: str, mesh, axis_name: str, k: int, nb: int):
-    key = (method, mesh, axis_name, k, nb)
+def _parallel_kernel(method: str, cfg: ExactConfig, mesh, axis_name: str):
+    if method == "exact":
+        key = ("engine", cfg.engine_config(), mesh, axis_name)
+    else:
+        key = (method, mesh, axis_name, cfg.nb)
     fn = _KERNEL_CACHE.get(key)
     if fn is None:
-        from repro.core import blocked as _blocked
+        from repro.core import engine as _engine
         from repro.core import gaussian as _gaussian
-        from repro.core import parallel as _parallel
         from repro.core import scalapack as _scalapack
-        if method == "pmc":
-            fn = _parallel.parallel_slogdet_mc(mesh, axis_name)
-        elif method == "pmc_blocked":
-            fn = _blocked.parallel_slogdet_mc_blocked(mesh, axis_name, k=k)
+        if method == "exact":
+            fn = _engine.build_mesh(cfg.engine_config(), mesh, axis_name)
         elif method == "pge":
             fn = _gaussian.parallel_slogdet_ge(mesh, axis_name)
         elif method == "plu":
-            fn = _scalapack.parallel_slogdet_lu(mesh, axis_name, nb=nb)
+            fn = _scalapack.parallel_slogdet_lu(mesh, axis_name, nb=cfg.nb)
         else:
             raise AssertionError(method)
         _KERNEL_CACHE[key] = fn
@@ -290,13 +356,13 @@ def _build_forward(spec: ProblemSpec, method: str, cfg: LogdetConfig,
     if method in EXACT_METHODS:
         from repro.estimators.grad import exact_slogdet_vjp
 
-        if method in PARALLEL_METHODS:
+        if _is_mesh_exact(method, cfg):
             if mesh is None:
                 raise ValueError(f"method {method!r} requires a mesh")
             p = int(mesh.shape[axis_name])
             mult = int(np.lcm(p, cfg.nb)) if method == "plu" else p
             padded_n = -(-spec.n // mult) * mult if spec.n else 0
-            pfn = _parallel_kernel(method, mesh, axis_name, cfg.k, cfg.nb)
+            pfn = _parallel_kernel(method, cfg, mesh, axis_name)
             wrapped = exact_slogdet_vjp(
                 lambda x: pfn(pad_to_multiple(x, mult)))
 
@@ -308,7 +374,7 @@ def _build_forward(spec: ProblemSpec, method: str, cfg: LogdetConfig,
 
             return fwd, False, padded_n
 
-        if method == "mc_blocked":
+        if method == "exact" and cfg.update == "panel":
             padded_n = -(-spec.n // cfg.k) * cfg.k if spec.n else 0
         core = _serial_exact_core(method, cfg)
         wrapped = exact_slogdet_vjp(core)
@@ -710,12 +776,44 @@ def plan(x, *, method: str = "auto", mesh=None, axis_name: str = "rows",
         probes = kwargs.get("num_probes", 32)
         est_cols = (kwargs.get("degree", 64) * probes if bounds_known
                     else kwargs.get("num_steps", 25) * probes + _BOUNDS_COLS)
-        method = select_method(spec, mesh=mesh, axis_name=axis_name,
-                               rtol=rtol, bounds_known=bounds_known,
-                               est_cols=est_cols)
+        method, route = select_route(spec, mesh=mesh, axis_name=axis_name,
+                                     rtol=rtol, bounds_known=bounds_known,
+                                     est_cols=est_cols)
         # the resolved family keeps its own knobs; the other family's are
         # dropped (typo-only names still raise inside the filter)
         kwargs = _filter_for_method(method, kwargs)
+        if route is not None:
+            # the selector's engine tuple, user-supplied axes winning
+            kwargs.setdefault("schedule", route.schedule)
+            kwargs.setdefault("update", route.update)
+    elif method in LEGACY_EXACT_ROUTES:
+        schedule, update = LEGACY_ROUTES[method]
+        warnings.warn(
+            f"exact route string {method!r} is deprecated: it is the "
+            f"engine instantiation method='exact', schedule={schedule!r}, "
+            f"update={update!r} — request that directly (docs/api.md has "
+            f"the route matrix)", DeprecationWarning, stacklevel=2)
+        if config is not None:
+            config = validate_config(method, config)
+            for axis, val in (("schedule", schedule), ("update", update)):
+                got = getattr(config, axis)
+                if got not in (None, val):
+                    raise TypeError(
+                        f"route {method!r} pins {axis}={val!r} but the "
+                        f"config says {got!r}; use method='exact' to "
+                        f"choose engine axes freely")
+            config = dataclasses.replace(config, schedule=schedule,
+                                         update=update)
+        else:
+            for axis, val in (("schedule", schedule), ("update", update)):
+                if kwargs.get(axis, val) != val:
+                    raise TypeError(
+                        f"route {method!r} pins {axis}={val!r}; got "
+                        f"{kwargs[axis]!r} — use method='exact' to choose "
+                        f"engine axes freely")
+            kwargs["schedule"] = schedule
+            kwargs["update"] = update
+        method = "exact"
     elif method not in METHODS:
         raise ValueError(
             f"unknown method {method!r}; choose from {METHODS} or 'auto'")
@@ -728,6 +826,8 @@ def plan(x, *, method: str = "auto", mesh=None, axis_name: str = "rows",
         cfg = validate_config(method, config)
     else:
         cfg = config_for(method, kwargs)
+    if method == "exact":
+        cfg = cfg.resolved(mesh_present=mesh is not None)
 
     if spec.kind == "operator":
         if method not in ESTIMATOR_METHODS:
@@ -739,11 +839,16 @@ def plan(x, *, method: str = "auto", mesh=None, axis_name: str = "rows",
             raise TypeError("operator inputs carry their own distribution; "
                             "mesh is only accepted for dense array inputs")
 
-    if method in PARALLEL_METHODS and mesh is None:
-        raise ValueError(f"method {method!r} requires a mesh")
-    if method in PARALLEL_METHODS and spec.batch is not None:
-        raise TypeError(f"method {method!r} distributes ONE matrix over "
-                        "the mesh; map it over the stack instead")
+    if _is_mesh_exact(method, cfg):
+        if spec.batch is not None:
+            raise TypeError(
+                f"method {method!r} (mesh schedule) distributes ONE matrix "
+                "over the mesh; batched stacks need a serial or staged "
+                "schedule — map a single-matrix plan over the stack instead")
+        if mesh is None:
+            raise ValueError(
+                "engine schedule 'mesh' requires a mesh" if method == "exact"
+                else f"method {method!r} requires a mesh")
 
     cache_key = None
     if spec.kind != "operator":
@@ -762,8 +867,15 @@ def plan(x, *, method: str = "auto", mesh=None, axis_name: str = "rows",
                                              grad=grad)
             return _bind(cached, x)
 
-    devices = int(mesh.shape[axis_name]) if mesh is not None \
-        else spec.device_count
+    # diagnostics must reflect the EXECUTION: a supplied mesh only spans
+    # devices for routes that actually distribute (mesh-schedule exact,
+    # sharded estimator matvecs) — a serial route picked by the selector
+    # despite a mesh runs on one device
+    if mesh is not None and (_is_mesh_exact(method, cfg)
+                             or method in ESTIMATOR_METHODS):
+        devices = int(mesh.shape[axis_name])
+    else:
+        devices = spec.device_count
     trace_log: list = []
     dtype = jnp.dtype(spec.dtype)
     fwd, compiled, padded_n = _build_forward(

@@ -31,7 +31,7 @@ from jax.sharding import PartitionSpec
 
 from repro._compat import (axis_size as _axis_size, pvary as _pvary,
                            shard_map as _shard_map)
-from repro.core.gaussian import cyclic_perm, perm_parity
+from repro.core.engine import cyclic_perm, guarded_pivot, perm_parity
 
 __all__ = ["parallel_slogdet_lu"]
 
@@ -81,7 +81,7 @@ def parallel_slogdet_lu(mesh, axis_name: str = "rows", *, nb: int = 1):
             F = F.at[li_p].set(jnp.where(swapped & mine_p, fboth[1], F[li_p]))
 
             # ---- factors + panel-restricted update ---------------------------
-            safe_p = jnp.where(p == 0, jnp.ones((), local.dtype), p)
+            safe_p = guarded_pivot(p, local.dtype)
             factor = jnp.where(grow > c, jnp.take(local, c, axis=1) / safe_p, 0.0)
             F = F.at[:, (c - t0).astype(jnp.int32)].set(factor.astype(F.dtype))
             colmask = ((cols > c) & (cols < t0 + nb)).astype(local.dtype)

@@ -67,32 +67,33 @@ def logdet_batched(stack, *, method: str = "chebyshev", **kw):
     ``stack`` is a (B, n, n) array or a batched operator (an operator
     exposing ``batch`` — e.g. `BatchedOperator` or a duck-typed implicit
     covariance stack); operators require an estimator method.  ``method``
-    is an estimator name or ``"mc"`` for the exact condensation core
-    mapped over the stack (the crossover reference: exact is the right
-    call for small n, estimators for large).  Estimator keywords pass
-    through (``num_probes``, ``degree`` / ``num_steps``, ``seed``, ...).
+    is an estimator name or any *serial* exact engine route ("exact" with
+    schedule/update knobs, the legacy "mc"/"mc_staged"/"mc_blocked"
+    aliases, or "ge") mapped over the stack — the crossover reference:
+    exact is the right call for small n, estimators for large.  Mesh
+    schedules distribute ONE matrix and raise a clear TypeError on
+    batched input.  Estimator keywords pass through (``num_probes``,
+    ``degree`` / ``num_steps``, ``seed``, ...).
     """
     if is_operator(stack):
         if getattr(stack, "batch", None) is None:
             raise ValueError(
                 "logdet_batched needs a batched operator (with a .batch "
                 "axis); use estimate_logdet for a single operator")
-        if method == "mc":
+        if method not in ESTIMATOR_METHODS:
             raise TypeError(
-                "method 'mc' needs a materialized (B, n, n) stack; "
+                f"method {method!r} needs a materialized (B, n, n) stack; "
                 "operator inputs require an estimator method "
                 f"{ESTIMATOR_METHODS}")
         return estimate_logdet(stack, method=method, **kw).est
     stack = jnp.asarray(stack)
     if stack.ndim != 3 or stack.shape[1] != stack.shape[2]:
         raise ValueError(f"expected (B, n, n) stack, got {stack.shape}")
-    if method == "mc":
-        import jax
-
-        from repro.core.condense import slogdet_condense
-        if kw:
-            raise TypeError(f"method 'mc' takes no estimator keywords: {kw}")
-        # exact VJP per matrix (bar_A = g * A^{-T}), vmapped over the stack
-        f = exact_slogdet_vjp(slogdet_condense)
-        return jax.vmap(lambda a: f(a)[1])(stack)
+    if method not in ESTIMATOR_METHODS:
+        # exact engine routes (and the GE baseline) run vmapped per matrix
+        # through a cached plan: the analytic-VJP wrapper, padding and the
+        # batched/mesh validation live in one place (repro.core.plan)
+        from repro.core.plan import plan as _make_plan
+        p = _make_plan(stack, method=method, validate=False, **kw)
+        return p.logdet(stack)
     return estimate_logdet(stack, method=method, **kw).est

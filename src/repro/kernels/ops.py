@@ -1,13 +1,31 @@
-"""Jitted kernel entry points with automatic backend dispatch.
+"""Jitted kernel entry points with explicit backend dispatch.
 
-On TPU the Pallas kernels compile natively; on CPU (this container) they run
-in ``interpret=True`` mode, which executes the kernel body in Python for
-correctness validation against ref.py.  The algorithm code (core/*.py) calls
-these via the ``update_fn`` / ``gemm_fn`` hooks.
+Three backends:
+
+  ``pallas``     the Pallas kernels compiled natively (TPU).
+  ``interpret``  the same Pallas kernel bodies run in ``interpret=True``
+                 mode — Python-slow, but byte-for-byte the kernel logic,
+                 which is what CPU CI wants for deterministic coverage.
+  ``xla``        the pure-jnp references (kernels/ref.py) or, for the
+                 panel factorization, the engine's jnp implementation —
+                 the fast fallback on non-TPU backends.
+
+Resolution order (most specific wins): an explicit ``backend=`` request
+from the caller (the engine passes its resolved backend; ``"pallas"``
+off-TPU degrades to ``"interpret"`` — the kernel body still runs, never
+a silent fall-through to the reference), else the
+``REPRO_KERNEL_BACKEND`` environment variable (re-read at every trace,
+so a test/CI job can force any backend deterministically — the old
+``lru_cache``d TPU probe pinned the choice for the whole process), else
+``pallas`` on TPU and ``xla`` elsewhere.
+
+The algorithm code (core/engine.py) calls these via its backend hooks.
 """
 from __future__ import annotations
 
 import functools
+import os
+from typing import Optional
 
 import jax
 
@@ -19,7 +37,10 @@ from repro.kernels.panel_update import panel_update_pallas
 from repro.kernels.stencil_mv import stencil_mv_pallas
 
 __all__ = ["rank1_update", "panel_update", "panel_factor_vmem", "matvec",
-           "stencil_mv", "on_tpu"]
+           "stencil_mv", "kernel_backend", "on_tpu", "KERNEL_BACKENDS"]
+
+KERNEL_BACKENDS = ("xla", "pallas", "interpret")
+_ENV_VAR = "REPRO_KERNEL_BACKEND"
 
 
 @functools.lru_cache(maxsize=1)
@@ -27,42 +48,90 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def rank1_update(a: jax.Array, pc: jax.Array, pr: jax.Array, **kw) -> jax.Array:
-    """Fused a -= outer(pc, pr); Pallas on TPU, interpret elsewhere."""
-    return rank1_update_pallas(a, pc, pr, interpret=not on_tpu(), **kw)
+def _dispatch(requested: Optional[str]) -> str:
+    """Resolve a backend: explicit request > env override > platform."""
+    src = "backend argument"
+    if requested is None:
+        requested = os.environ.get(_ENV_VAR, "").strip().lower() or None
+        src = _ENV_VAR
+    if requested is not None and requested not in KERNEL_BACKENDS:
+        raise ValueError(
+            f"{src}={requested!r}: choose one of {KERNEL_BACKENDS}")
+    if requested == "pallas" and not on_tpu():
+        return "interpret"          # run the kernel BODY, not the reference
+    if requested is not None:
+        return requested
+    return "pallas" if on_tpu() else "xla"
 
 
-def panel_update(a: jax.Array, c: jax.Array, r: jax.Array, **kw) -> jax.Array:
-    """Fused a -= c @ r; Pallas on TPU, interpret elsewhere."""
-    return panel_update_pallas(a, c, r, interpret=not on_tpu(), **kw)
+def kernel_backend() -> str:
+    """The process-default kernel backend: env override, else platform."""
+    env = os.environ.get(_ENV_VAR, "").strip().lower()
+    if env:
+        if env not in KERNEL_BACKENDS:
+            raise ValueError(
+                f"{_ENV_VAR}={env!r}: choose one of {KERNEL_BACKENDS}")
+        return env
+    return "pallas" if on_tpu() else "xla"
 
 
-def matvec(a: jax.Array, x: jax.Array, **kw) -> jax.Array:
-    """Tiled a @ x (vector or multi-vector); Pallas on TPU, jnp elsewhere.
+def rank1_update(a: jax.Array, pc: jax.Array, pr: jax.Array, *,
+                 backend: Optional[str] = None, **kw) -> jax.Array:
+    """Fused a -= outer(pc, pr); backend per `_dispatch`."""
+    b = _dispatch(backend)
+    if b == "xla":
+        return _ref.rank1_update_ref(a, pc, pr)
+    return rank1_update_pallas(a, pc, pr, interpret=b == "interpret", **kw)
+
+
+def panel_update(a: jax.Array, c: jax.Array, r: jax.Array, *,
+                 backend: Optional[str] = None, **kw) -> jax.Array:
+    """Fused a -= c @ r; backend per `_dispatch`."""
+    b = _dispatch(backend)
+    if b == "xla":
+        return _ref.panel_update_ref(a, c, r)
+    return panel_update_pallas(a, c, r, interpret=b == "interpret", **kw)
+
+
+def matvec(a: jax.Array, x: jax.Array, *, backend: Optional[str] = None,
+           **kw) -> jax.Array:
+    """Tiled a @ x (vector or multi-vector).
 
     Unlike the update kernels (whose interpret mode is fast enough for
-    validation-sized inputs), the estimators issue thousands of matvecs — on
-    non-TPU backends we fall through to the XLA-fused reference instead of
-    the Python interpreter.
+    validation-sized inputs), the estimators issue thousands of matvecs —
+    only an explicit ``interpret`` request opts into the Python
+    interpreter here; otherwise non-TPU backends use the XLA-fused
+    reference (``pallas`` off-TPU degrades to interpret via `_dispatch`).
     """
-    if on_tpu():
+    b = _dispatch(backend)
+    if b == "pallas":
         return matvec_pallas(a, x, **kw)
+    if b == "interpret":
+        return matvec_pallas(a, x, interpret=True, **kw)
     return _ref.matvec_ref(a, x)
 
 
 def stencil_mv(bands: jax.Array, x: jax.Array, *, offsets: tuple,
-               **kw) -> jax.Array:
-    """Banded stencil matvec; Pallas on TPU, jnp reference elsewhere.
-
-    Like `matvec`, the estimators drive this thousands of times — on non-TPU
-    backends fall through to the XLA-fused reference rather than the Python
-    interpreter.
-    """
-    if on_tpu():
+               backend: Optional[str] = None, **kw) -> jax.Array:
+    """Banded stencil matvec; same dispatch policy as `matvec`."""
+    b = _dispatch(backend)
+    if b == "pallas":
         return stencil_mv_pallas(bands, x, offsets=offsets, **kw)
+    if b == "interpret":
+        return stencil_mv_pallas(bands, x, offsets=offsets, interpret=True,
+                                 **kw)
     return _ref.stencil_mv_ref(bands, x, offsets=offsets)
 
 
-def panel_factor_vmem(panel: jax.Array, m0, r_pos=0):
-    """VMEM-resident k-step panel factorization (§Perf P0/It3)."""
-    return panel_factor_pallas(panel, m0, r_pos, interpret=not on_tpu())
+def panel_factor_vmem(panel: jax.Array, m0, r_pos=0, *,
+                      backend: Optional[str] = None):
+    """VMEM-resident k-step panel factorization (§Perf P0/It3).
+
+    On the ``xla`` backend falls through to the engine's jnp panel
+    factorization (same numerics, XLA-fused) instead of the interpreter.
+    """
+    b = _dispatch(backend)
+    if b == "xla":
+        from repro.core.engine import panel_factor
+        return panel_factor(panel, m0, r_pos=r_pos)
+    return panel_factor_pallas(panel, m0, r_pos, interpret=b == "interpret")

@@ -1,0 +1,199 @@
+"""The unified condensation engine: every (schedule x update x backend)
+route must agree with ``jnp.linalg.slogdet`` on sign AND logabsdet —
+including permuted, negative-determinant and near-singular inputs — and
+the legacy route strings must be pure aliases of engine instantiations.
+
+This file runs under the CI deprecation gate (-W error::DeprecationWarning)
+so nothing here may touch a legacy spelling unguarded.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro
+from repro.core.engine import (
+    EngineConfig, LEGACY_ROUTES, build_mesh, build_serial, engine_slogdet,
+)
+
+SCHEDULES_SERIAL = ("serial", "staged")
+UPDATES = ("rank1", "panel")
+BACKENDS = ("xla", "pallas")
+
+
+def _cases():
+    rng = np.random.default_rng(42)
+    cases = {}
+    cases["random"] = rng.standard_normal((48, 48))
+    # odd size, big scale: exercises remainder steps + log-domain math
+    cases["scaled_odd"] = rng.standard_normal((37, 37)) * 1e6
+    # permutation matrix: det = +-1, sign tracking must be exact
+    cases["permutation"] = np.eye(41)[rng.permutation(41)]
+    # negative determinant: SPD with one negated row
+    spd = rng.standard_normal((32, 64))
+    spd = spd @ spd.T / 64 + 2.0 * np.eye(32)
+    neg = spd.copy()
+    neg[3] = -neg[3]
+    cases["negative_det"] = neg
+    # near-singular: rank-4 + tiny ridge (logabsdet very negative but finite)
+    b = rng.standard_normal((24, 4))
+    cases["near_singular"] = b @ b.T + 1e-10 * np.eye(24)
+    return cases
+
+
+CASES = _cases()
+
+
+# near_singular sits at condition ~1e10: condensation and LAPACK may
+# legitimately differ in the last ~6 bits of a very negative logabsdet
+_CASE_RTOL = {"near_singular": 1e-5}
+
+
+def assert_matches_ref(got, a, rtol=1e-9, case=None):
+    s, ld = float(got[0]), float(got[1])
+    s_ref, ld_ref = np.linalg.slogdet(np.asarray(a))
+    assert s == pytest.approx(s_ref), (s, s_ref)
+    rtol = max(rtol, _CASE_RTOL.get(case, 0.0))
+    np.testing.assert_allclose(ld, ld_ref, rtol=rtol, atol=1e-8)
+
+
+@pytest.mark.parametrize("case", sorted(CASES))
+@pytest.mark.parametrize("update", UPDATES)
+@pytest.mark.parametrize("schedule", SCHEDULES_SERIAL)
+def test_serial_routes_match_slogdet(schedule, update, case):
+    cfg = EngineConfig(schedule=schedule, update=update, panel_k=8,
+                       min_size=16, backend="xla")
+    a = jnp.asarray(CASES[case])
+    if update == "panel":
+        # panel routes factor full K-panels; plans pad — mirror that here
+        from repro.core import pad_to_multiple
+        a = pad_to_multiple(a, 8)
+    assert_matches_ref(engine_slogdet(a, cfg), a, rtol=1e-8, case=case)
+
+
+@pytest.mark.parametrize("update", UPDATES)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backend_axis_matches_slogdet(update, backend, monkeypatch):
+    """The Pallas hook path (interpret mode on CPU, forced via the env
+    override) must agree with the XLA expressions digit for digit."""
+    if backend == "pallas":
+        monkeypatch.setenv("REPRO_KERNEL_BACKEND", "interpret")
+    a = jnp.asarray(CASES["random"][:24, :24])
+    cfg = EngineConfig(schedule="serial", update=update, panel_k=8,
+                       backend=backend)
+    assert_matches_ref(engine_slogdet(a, cfg), a, rtol=1e-8)
+
+
+def test_staged_panel_combination_is_new_but_correct():
+    """staged x panel had no legacy route string; it must still be a
+    first-class engine point."""
+    rng = np.random.default_rng(7)
+    a = rng.standard_normal((200, 200))
+    cfg = EngineConfig(schedule="staged", update="panel", panel_k=16,
+                       min_size=32)
+    assert_matches_ref(engine_slogdet(jnp.asarray(a), cfg), a, rtol=1e-8)
+
+
+@pytest.mark.parametrize("update", UPDATES)
+def test_mesh_routes_match_slogdet_one_device(update, mesh1):
+    rng = np.random.default_rng(3)
+    a = rng.standard_normal((24, 24))
+    cfg = EngineConfig(schedule="mesh", update=update, panel_k=8)
+    fn = build_mesh(cfg, mesh1)
+    assert_matches_ref(fn(jnp.asarray(a)), a)
+
+
+def test_mesh_route_validates_divisibility(mesh1):
+    cfg = EngineConfig(schedule="mesh")
+    fn = build_mesh(cfg, mesh1)
+    fn(jnp.eye(8))                      # 8 % 1 == 0: fine
+    with pytest.raises(ValueError, match="schedule"):
+        build_serial(cfg)               # mesh cfg needs build_mesh
+    with pytest.raises(ValueError, match="mesh"):
+        engine_slogdet(jnp.eye(8), cfg)  # no mesh supplied
+
+
+def test_engine_config_validation():
+    with pytest.raises(ValueError, match="schedule"):
+        EngineConfig(schedule="spiral")
+    with pytest.raises(ValueError, match="update"):
+        EngineConfig(update="rank3")
+    with pytest.raises(ValueError, match="backend"):
+        EngineConfig(backend="rocm")
+    with pytest.raises(ValueError, match="shrink"):
+        EngineConfig(shrink=1.5)
+
+
+def test_legacy_route_table_covers_the_condensation_matrix():
+    """Every non-mesh legacy route string denotes a serial engine point and
+    reproduces it exactly (the step logic exists once)."""
+    rng = np.random.default_rng(11)
+    a = jnp.asarray(rng.standard_normal((40, 40)))
+    from repro.core import pad_to_multiple
+    for route, (schedule, update) in LEGACY_ROUTES.items():
+        if schedule == "mesh":
+            continue
+        cfg = EngineConfig(schedule=schedule, update=update)
+        x = pad_to_multiple(a, cfg.panel_k) if update == "panel" else a
+        s, ld = engine_slogdet(x, cfg)
+        s_ref, ld_ref = np.linalg.slogdet(np.asarray(a))
+        assert float(s) == pytest.approx(s_ref), route
+        np.testing.assert_allclose(float(ld), ld_ref, rtol=1e-8)
+
+
+def test_legacy_wrappers_are_engine_aliases():
+    """The historical module entry points must be the engine's functions,
+    not copies — the acceptance criterion that the rank-1/panel step logic
+    exists in exactly one module."""
+    from repro.core import blocked, condense, engine, parallel
+    assert condense.slogdet_condense is engine.condense_full
+    assert condense.condense_steps is engine.condense_steps
+    assert condense.combine_slogdet is engine.combine_slogdet
+    assert blocked.panel_factor is engine.panel_factor
+    assert blocked.apply_panel is engine.apply_panel
+    assert blocked.slogdet_condense_blocked is engine.blocked_full
+    assert parallel.mc_step_fn is engine.mc_step_fn
+    assert parallel.mc_local_phase is engine.mc_local_phase
+
+
+def test_shared_sign_helpers_back_the_baselines():
+    from repro.core import engine, gaussian, scalapack
+    assert gaussian.cyclic_perm is engine.cyclic_perm
+    assert gaussian.perm_parity is engine.perm_parity
+    perm = np.array([1, 0, 2])
+    assert engine.perm_parity(perm) == -1.0
+    assert engine.perm_parity(engine.cyclic_perm(8, 2)).__abs__() == 1.0
+
+
+@pytest.mark.slow
+def test_engine_mesh_routes_eight_devices():
+    """The unified engine on a real 8-fake-device mesh: round-robin
+    schedule, both update modes, against numpy."""
+    from tests._subproc import run_with_devices, SRC
+    out = run_with_devices(
+        """
+import sys; sys.path.insert(0, %r)
+import repro
+from repro.core.engine import EngineConfig, build_mesh
+from repro._compat import make_mesh
+mesh = make_mesh((8,), ("rows",))
+rng = np.random.default_rng(5)
+for n in (64, 96):
+    a = rng.standard_normal((n, n))
+    s_ref, ld_ref = np.linalg.slogdet(a)
+    for update in ("rank1", "panel"):
+        cfg = EngineConfig(schedule="mesh", update=update, panel_k=4)
+        s, ld = build_mesh(cfg, mesh)(jnp.asarray(a))
+        assert float(s) == s_ref, (update, n, float(s), s_ref)
+        assert abs(float(ld) - ld_ref) < 1e-8, (update, n, float(ld), ld_ref)
+# diagnostics reflect execution: a serial route ignores the mesh
+p_mesh = repro.plan((64, 64), method="exact", schedule="mesh", mesh=mesh)
+p_serial = repro.plan((64, 64), method="exact", schedule="staged", mesh=mesh)
+assert p_mesh.diagnostics.device_count == 8, p_mesh.diagnostics
+assert p_serial.diagnostics.device_count == 1, p_serial.diagnostics
+print("OK")
+""" % SRC,
+        n_devices=8,
+    )
+    assert "OK" in out

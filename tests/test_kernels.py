@@ -102,3 +102,139 @@ def test_panel_factor_vmem_budget():
     big = jnp.zeros((64, 65536), jnp.float32)        # 16 MiB > budget
     with pytest.raises(ValueError, match="VMEM"):
         panel_factor_pallas(big, 65536, interpret=True)
+
+
+# ----------------------------------------------- kernel <-> reference parity
+# Interpret-mode sweeps at adversarial geometry: nothing a multiple of the
+# (8, 128) f32 VREG tile, K not a multiple of 128, low-precision dtypes.
+
+ODD_SHAPES_R1 = [(1, 1), (7, 129), (129, 7), (255, 383), (130, 130)]
+ODD_SHAPES_PK = [(7, 129, 3), (65, 190, 33), (129, 257, 100), (50, 61, 50)]
+
+
+@pytest.mark.parametrize("shape", ODD_SHAPES_R1)
+def test_rank1_update_non_tile_multiple(shape, rng):
+    m, n = shape
+    a = rng.standard_normal((m, n)).astype(np.float32)
+    pc = rng.standard_normal((m,)).astype(np.float32)
+    pr = rng.standard_normal((n,)).astype(np.float32)
+    got = rank1_update_pallas(a, pc, pr, interpret=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               ref.rank1_update_ref(a, pc, pr),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("shape", ODD_SHAPES_PK)
+def test_panel_update_k_not_multiple_of_128(shape, rng):
+    m, n, k = shape
+    a = rng.standard_normal((m, n)).astype(np.float32)
+    c = rng.standard_normal((m, k)).astype(np.float32)
+    r = rng.standard_normal((k, n)).astype(np.float32)
+    got = panel_update_pallas(a, c, r, interpret=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               ref.panel_update_ref(a, c, r),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rank1_update_bf16(rng):
+    a = rng.standard_normal((33, 257)).astype(jnp.bfloat16)
+    pc = rng.standard_normal((33,)).astype(jnp.bfloat16)
+    pr = rng.standard_normal((257,)).astype(jnp.bfloat16)
+    got = rank1_update_pallas(a, pc, pr, interpret=True)
+    want = ref.rank1_update_ref(a.astype(np.float32), pc.astype(np.float32),
+                                pr.astype(np.float32))
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want),
+                               rtol=0.1, atol=0.1)
+
+
+@pytest.mark.parametrize("k,n,m0", [(3, 33, 33), (5, 129, 100), (16, 200, 170)])
+@pytest.mark.parametrize("dt", [np.float32, np.float64])
+def test_panel_factor_non_tile_multiple(k, n, m0, dt, rng):
+    from repro.core.engine import panel_factor
+    from repro.kernels.panel_factor import panel_factor_pallas
+    panel = jnp.asarray(rng.standard_normal((k, n)), dt)
+    R1, ls1, s1, ld1 = panel_factor(panel, m0, r_pos=3)
+    R2, ls2, s2, ld2 = panel_factor_pallas(panel, m0, 3, interpret=True)
+    np.testing.assert_array_equal(np.asarray(R1), np.asarray(R2))
+    assert (np.asarray(ls1) == np.asarray(ls2)).all()
+    assert float(s1) == float(s2)
+    np.testing.assert_allclose(float(ld1), float(ld2), rtol=0)
+
+
+# ------------------------------------------------- backend dispatch (env)
+
+def test_kernel_backend_env_override(monkeypatch):
+    monkeypatch.delenv("REPRO_KERNEL_BACKEND", raising=False)
+    assert ops.kernel_backend() in ops.KERNEL_BACKENDS
+    for b in ops.KERNEL_BACKENDS:
+        monkeypatch.setenv("REPRO_KERNEL_BACKEND", b)
+        assert ops.kernel_backend() == b
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "metal")
+    with pytest.raises(ValueError, match="REPRO_KERNEL_BACKEND"):
+        ops.kernel_backend()
+
+
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+def test_ops_dispatch_agrees_across_backends(backend, monkeypatch, rng):
+    """Forcing the env override must not change results — deterministic
+    interpret-mode kernel coverage on CPU CI."""
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", backend)
+    a = rng.standard_normal((33, 65)).astype(np.float32)
+    pc = rng.standard_normal((33,)).astype(np.float32)
+    pr = rng.standard_normal((65,)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(ops.rank1_update(a, pc, pr)),
+                               ref.rank1_update_ref(a, pc, pr),
+                               rtol=2e-5, atol=2e-5)
+    c = rng.standard_normal((33, 5)).astype(np.float32)
+    r = rng.standard_normal((5, 65)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(ops.panel_update(a, c, r)),
+                               ref.panel_update_ref(a, c, r),
+                               rtol=2e-5, atol=2e-5)
+    x = rng.standard_normal((65, 3)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(ops.matvec(a, x)),
+                               np.asarray(ref.matvec_ref(a, x)),
+                               rtol=2e-4, atol=2e-4)
+    panel = jnp.asarray(rng.standard_normal((4, 32)), jnp.float32)
+    R, ls, s, ld = ops.panel_factor_vmem(panel, 32)
+    from repro.core.engine import panel_factor
+    R_ref, ls_ref, s_ref, ld_ref = panel_factor(panel, 32)
+    np.testing.assert_allclose(np.asarray(R), np.asarray(R_ref),
+                               rtol=1e-6, atol=1e-6)
+    assert (np.asarray(ls) == np.asarray(ls_ref)).all()
+
+
+def test_use_kernel_runs_the_pallas_body_off_tpu(monkeypatch, rng):
+    """use_kernel=True is an explicit kernel request: off-TPU it must run
+    the Pallas kernel body in interpret mode, never silently fall through
+    to the jnp reference (regression: the dispatch rewrite briefly routed
+    it to ref.rank1_update_ref on CPU)."""
+    import repro.kernels.ops as ops_mod
+    calls = []
+    real = ops_mod.rank1_update_pallas
+
+    def spy(*a, **k):
+        calls.append(k.get("interpret"))
+        return real(*a, **k)
+
+    monkeypatch.setattr(ops_mod, "rank1_update_pallas", spy)
+    monkeypatch.delenv("REPRO_KERNEL_BACKEND", raising=False)
+    a = rng.standard_normal((13, 13))          # fresh shape: forces a trace
+    s, ld = slogdet_condense(a, use_kernel=True)
+    assert calls, "use_kernel=True must reach the Pallas kernel"
+    assert all(calls), "off-TPU the kernel must run in interpret mode"
+    np.testing.assert_allclose(float(ld), np.linalg.slogdet(a)[1], rtol=1e-9)
+
+
+def test_engine_backend_pallas_through_env(monkeypatch, rng):
+    """REPRO_KERNEL_BACKEND=interpret routes the engine's backend='auto'
+    through the Pallas kernels in interpret mode, end to end."""
+    from repro.core.engine import EngineConfig, engine_slogdet
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "interpret")
+    a = rng.standard_normal((24, 24))
+    s_ref, ld_ref = np.linalg.slogdet(a)
+    for update in ("rank1", "panel"):
+        cfg = EngineConfig(schedule="serial", update=update, panel_k=8,
+                           backend="auto")
+        s, ld = engine_slogdet(jnp.asarray(a), cfg)
+        assert float(s) == pytest.approx(s_ref), update
+        np.testing.assert_allclose(float(ld), ld_ref, rtol=1e-9)

@@ -10,6 +10,8 @@ small dense N, estimators for large N / implicit operators, mesh-aware),
 the unified `LogdetResult` across every path, the non-SPD screen, plan
 caching / no-retrace behavior, and diagnostics-rich gradients.
 """
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -18,7 +20,8 @@ import jax.numpy as jnp
 
 import repro
 from repro import (
-    ChebyshevConfig, ExactConfig, LogdetResult, SLQConfig, select_method,
+    ChebyshevConfig, EngineConfig, ExactConfig, LogdetResult, SLQConfig,
+    select_method, select_route,
 )
 from repro.estimators import StencilOperator, ToeplitzOperator
 
@@ -27,6 +30,10 @@ def make_spd(n, seed, shift=2.0):
     rng = np.random.default_rng(seed)
     x = rng.standard_normal((n, 2 * n))
     return x @ x.T / (2 * n) + shift * np.eye(n)
+
+
+def spec_with_devices(n, devices):
+    return dataclasses.replace(repro.spec_of((n, n)), device_count=devices)
 
 
 # ------------------------------------------------------------ typed configs
@@ -40,11 +47,24 @@ def test_config_validation_rejects_bad_values():
         ChebyshevConfig(lmin=4.0, lmax=1.0)
     with pytest.raises(ValueError, match="k must be"):
         ExactConfig(k=0)
+    with pytest.raises(ValueError, match="schedule"):
+        ExactConfig(schedule="diagonal")
+    with pytest.raises(ValueError, match="update"):
+        ExactConfig(update="rank2")
+    with pytest.raises(ValueError, match="backend"):
+        ExactConfig(backend="cuda")
+    with pytest.raises(ValueError, match="schedule"):
+        EngineConfig(schedule="bogus")
+    with pytest.raises(ValueError, match="panel_k"):
+        EngineConfig(panel_k=0)
 
 
 def test_plan_rejects_unknown_and_misfiled_kwargs():
     with pytest.raises(TypeError, match="estimator keywords"):
-        repro.plan((8, 8), method="mc", num_probes=4)
+        repro.plan((8, 8), method="exact", num_probes=4)
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        with pytest.raises(TypeError, match="estimator keywords"):
+            repro.plan((8, 8), method="mc", num_probes=4)
     with pytest.raises(TypeError, match="unknown keywords"):
         repro.plan((8, 8), method="chebyshev", num_steps=10)
     with pytest.raises(TypeError, match="unknown keywords"):
@@ -67,10 +87,28 @@ def test_plan_config_instance_must_match_method():
 # ------------------------------------------------------------- auto select
 
 def test_auto_picks_exact_below_crossover():
-    assert select_method((64, 64)) == "mc_staged"
-    assert select_method((512, 512)) == "mc_staged"
-    # batched small stacks: vmapped exact condensation
-    assert select_method((8, 64, 64)) == "mc"
+    assert select_method((64, 64)) == "exact"
+    assert select_method((512, 512)) == "exact"
+    # batched small stacks: vmapped exact condensation per matrix
+    assert select_method((8, 64, 64)) == "exact"
+
+
+def test_auto_resolves_route_tuples_not_strings():
+    """The selector answers with an EngineConfig tuple for the exact
+    family — and the tuple's axes respond to the problem shape."""
+    m, route = select_route((64, 64))
+    assert m == "exact" and isinstance(route, EngineConfig)
+    # too small for rank-K panels to amortize: rank-1 updates
+    assert route.update == "rank1" and route.schedule in ("serial", "staged")
+    # large single-device exact work rides the MXU: panel updates
+    m2, route2 = select_route((2048, 2048), rtol=1e-9)
+    assert m2 == "exact" and route2.update == "panel"
+    # batched stacks run the vmapped serial schedule, never mesh
+    m3, route3 = select_route((8, 64, 64))
+    assert m3 == "exact" and route3.schedule == "serial"
+    # estimator picks carry no engine tuple
+    m4, route4 = select_route((8192, 8192))
+    assert m4 == "slq" and route4 is None
 
 
 def test_auto_picks_estimator_above_crossover():
@@ -112,7 +150,7 @@ def test_auto_drops_other_familys_kwargs():
     # below the crossover auto resolves to exact: the estimator knobs are
     # dropped rather than crashing the plan the selector picked
     p = repro.plan((64, 64), method="auto", num_probes=16)
-    assert p.method == "mc_staged" and isinstance(p.config, ExactConfig)
+    assert p.method == "exact" and isinstance(p.config, ExactConfig)
     # above the crossover the same knobs land in the estimator config
     p2 = repro.plan((8192, 8192), method="auto", num_probes=16)
     assert p2.method == "slq" and p2.config.num_probes == 16
@@ -123,29 +161,102 @@ def test_auto_drops_other_familys_kwargs():
 
 def test_auto_accuracy_demand_forces_exact():
     # at rtol below the Monte-Carlo floor only exact methods qualify
-    assert select_method((8192, 8192), rtol=1e-8) == "mc_staged"
+    assert select_method((8192, 8192), rtol=1e-8) == "exact"
     assert select_method((8192, 8192), rtol=1e-2) == "slq"
 
 
-def test_auto_mesh_shifts_choice_to_parallel(mesh1):
-    from repro._compat import make_mesh
-    # selector consults the device count: exact family -> parallel method
-    assert select_method((256, 256), mesh=mesh1) == "mc_staged"  # 1 device
-    # a hypothetical 8-way mesh cannot be built in-process here, but the
-    # spec-level device_count path is what the mesh feeds into
-    spec = repro.spec_of((256, 256))
-    import dataclasses
-    spec8 = dataclasses.replace(spec, device_count=8)
-    assert select_method(spec8) == "pmc"
+# ------------------------------------------- calibrated cost model (roofline)
+
+def test_calibration_table_is_measured_not_static():
+    """The selector must load the committed measured roofline table, not
+    fall back to the static defaults."""
+    from repro.core.calibration import load_calibration
+    cal = load_calibration()
+    assert cal.source.startswith("measured"), cal
+    for v in (cal.gemm_flops, cal.stream_bytes, cal.collective_lat,
+              cal.collective_bytes):
+        assert v > 0
+
+
+def _dense_est_crossover(devices, lo=32, hi=1 << 22):
+    """Smallest N where the selector leaves the exact family."""
+    assert select_method(spec_with_devices(lo, devices)) == "exact"
+    assert select_method(spec_with_devices(hi, devices)) != "exact"
+    while hi - lo > 1:
+        mid = (lo + hi) // 2
+        if select_method(spec_with_devices(mid, devices)) == "exact":
+            lo = mid
+        else:
+            hi = mid
+    return hi
+
+
+def _serial_mesh_crossover(devices, lo=8, hi=1 << 22):
+    """Smallest N where the exact family flips to the mesh schedule
+    (rtol pinned below the Monte-Carlo floor so exact always wins)."""
+    def schedule(n):
+        return select_route(spec_with_devices(n, devices), rtol=1e-9)[1] \
+            .schedule
+    assert schedule(lo) != "mesh"
+    assert schedule(hi) == "mesh"
+    while hi - lo > 1:
+        mid = (lo + hi) // 2
+        if schedule(mid) == "mesh":
+            hi = mid
+        else:
+            lo = mid
+    return hi
+
+
+def test_dense_estimator_crossover_varies_with_devices():
+    """The static-FLOP model divided both sides by P, making the crossover
+    device-count-invariant; the measured model's collective terms do not
+    shrink with P, so it must move."""
+    assert _dense_est_crossover(1) != _dense_est_crossover(8)
+
+
+def test_serial_mesh_crossover_varies_with_devices():
+    c2, c8 = _serial_mesh_crossover(2), _serial_mesh_crossover(8)
+    assert c2 != c8
+    # small matrices never pay the per-step broadcast latency
+    assert min(c2, c8) > 32
+
+
+def _serial_mesh_crossover_cal(devices, cal, lo=8, hi=1 << 22):
+    def schedule(n):
+        return select_route(spec_with_devices(n, devices), rtol=1e-9,
+                            calibration=cal)[1].schedule
+    if schedule(hi) != "mesh":
+        return hi + 1
+    while hi - lo > 1:
+        mid = (lo + hi) // 2
+        if schedule(mid) == "mesh":
+            hi = mid
+        else:
+            lo = mid
+    return hi
+
+
+def test_mesh_crossover_prices_the_communication_term():
+    """Degrading the measured collective terms 100x must push the mesh
+    schedule's break-even point up — the selector really reads the table,
+    not a constant."""
+    from repro.core.calibration import load_calibration
+    cal = load_calibration()
+    slow = dataclasses.replace(cal, collective_lat=cal.collective_lat * 100,
+                               collective_bytes=cal.collective_bytes / 100)
+    assert _serial_mesh_crossover_cal(8, slow) > \
+        _serial_mesh_crossover_cal(8, cal)
 
 
 def test_auto_plan_resolves_and_executes():
     a = make_spd(48, 0)
     p = repro.plan(a, method="auto")
-    assert p.method == "mc_staged"          # resolved, never "auto"
+    assert p.method == "exact"              # resolved, never "auto"
+    assert p.config.schedule in ("serial", "staged")
     res = p()
     assert isinstance(res, LogdetResult)
-    assert res.method_used == "mc_staged"
+    assert res.method_used == "exact"
     np.testing.assert_allclose(float(res.logabsdet),
                                np.linalg.slogdet(a)[1], rtol=1e-9)
 
@@ -184,8 +295,9 @@ def test_validate_false_skips_spd_screen():
 # --------------------------------------------------------- unified results
 
 @pytest.mark.parametrize("method,kw", [
-    ("mc", {}),
-    ("mc_staged", {}),
+    ("exact", dict(schedule="serial")),
+    ("exact", dict(schedule="staged")),
+    ("exact", dict(schedule="serial", update="panel", k=16)),
     ("ge", {}),
     ("chebyshev", dict(degree=48, num_probes=32)),
     ("slq", dict(num_steps=20, num_probes=32)),
@@ -217,7 +329,7 @@ def test_every_path_returns_logdet_result(method, kw):
 def test_batched_plan_unified_result():
     stack = np.stack([make_spd(32, s, shift=1.5 + 0.1 * s) for s in range(4)])
     ref = np.array([np.linalg.slogdet(m)[1] for m in stack])
-    exact = repro.plan(stack, method="mc")()
+    exact = repro.plan(stack, method="exact", schedule="serial")()
     np.testing.assert_allclose(np.asarray(exact.logabsdet), ref, rtol=1e-9)
     assert exact.sign.shape == (4,) and float(exact.sem.max()) == 0.0
     est = repro.plan(stack, method="slq", num_probes=48)()
@@ -226,11 +338,34 @@ def test_batched_plan_unified_result():
     assert np.median(rel) < 5e-2
 
 
+def test_batched_stack_accepts_any_serial_engine_route():
+    """logdet_batched used to hardwire the 'mc' route; stacks now run any
+    engine route — panel updates included — and mesh schedules fail with
+    a targeted error, not a generic one."""
+    stack = np.stack([make_spd(24, s) for s in range(3)])
+    ref = np.array([np.linalg.slogdet(m)[1] for m in stack])
+    for kw in (dict(schedule="serial", update="panel", k=8),
+               dict(schedule="staged"),
+               dict(schedule="staged", update="panel", k=8)):
+        res = repro.plan(stack, method="exact", **kw)()
+        np.testing.assert_allclose(np.asarray(res.logabsdet), ref,
+                                   rtol=1e-8)
+    with pytest.raises(TypeError, match="ONE matrix"):
+        repro.plan(stack, method="exact", schedule="mesh")
+    # the non-deprecated batched entry point takes engine routes too
+    from repro.estimators import logdet_batched as est_batched
+    got = est_batched(stack, method="exact", update="panel", k=8)
+    np.testing.assert_allclose(np.asarray(got), ref, rtol=1e-8)
+
+
 def test_mesh_plan_matches_serial(mesh1):
     a = make_spd(24, 2)
-    res = repro.plan(a, method="pmc", mesh=mesh1)()
+    res = repro.plan(a, method="exact", schedule="mesh", mesh=mesh1)()
     np.testing.assert_allclose(float(res.logabsdet),
                                np.linalg.slogdet(a)[1], rtol=1e-9)
+    # a supplied mesh resolves the default schedule to "mesh"
+    p_default = repro.plan(a, method="exact", mesh=mesh1)
+    assert p_default.config.schedule == "mesh"
     est = repro.plan(a, method="chebyshev", mesh=mesh1,
                      num_probes=16, degree=32)()
     direct = repro.plan(a, method="chebyshev", num_probes=16, degree=32)()
@@ -238,8 +373,22 @@ def test_mesh_plan_matches_serial(mesh1):
                                float(direct.logabsdet), rtol=1e-10)
 
 
+def test_mesh_panel_plan_matches_serial(mesh1):
+    a = make_spd(24, 12)
+    res = repro.plan(a, method="exact", schedule="mesh", update="panel",
+                     k=8, mesh=mesh1)()
+    np.testing.assert_allclose(float(res.logabsdet),
+                               np.linalg.slogdet(a)[1], rtol=1e-9)
+    assert float(res.sign) == float(np.linalg.slogdet(a)[0])
+
+
+def test_mesh_schedule_without_mesh_is_an_error():
+    with pytest.raises(ValueError, match="requires a mesh"):
+        repro.plan((16, 16), method="exact", schedule="mesh")
+
+
 def test_spec_only_plan_requires_matching_input():
-    p = repro.plan((16, 16), method="mc")
+    p = repro.plan((16, 16), method="exact", schedule="serial")
     with pytest.raises(TypeError, match="shape spec"):
         p()
     with pytest.raises(ValueError, match="compiled for shape"):
@@ -250,13 +399,13 @@ def test_spec_only_plan_requires_matching_input():
 
 def test_precision_override_casts():
     a = make_spd(24, 3)                      # float64 under x64
-    p = repro.plan((24, 24), method="mc", precision="float32")
+    p = repro.plan((24, 24), method="exact", precision="float32")
     res = p(a)
     assert res.logabsdet.dtype == jnp.float32
 
 
 def test_exact_plan_rejects_runtime_randomness():
-    p = repro.plan((8, 8), method="mc")
+    p = repro.plan((8, 8), method="exact")
     with pytest.raises(TypeError, match="key"):
         p(np.eye(8), key=jax.random.PRNGKey(0))
 
@@ -265,11 +414,74 @@ def test_exact_plan_rejects_runtime_randomness():
 
 def test_plan_cache_shares_compiled_executable():
     a = make_spd(20, 4)
-    p1 = repro.plan(a, method="mc_staged")
-    p2 = repro.plan((20, 20), method="mc_staged")
+    p1 = repro.plan(a, method="exact", schedule="staged")
+    p2 = repro.plan((20, 20), method="exact", schedule="staged")
     assert p1._fwd is p2._fwd                 # one artifact, both handles
-    p3 = repro.plan((20, 20), method="mc_staged", config=ExactConfig())
+    p3 = repro.plan((20, 20), method="exact",
+                    config=ExactConfig(schedule="staged"))
     assert p3._fwd is p1._fwd                 # default config == no kwargs
+    # the bare default spelling resolves to staged x rank1 too
+    p4 = repro.plan((20, 20), method="exact")
+    assert p4._fwd is p1._fwd
+
+
+# ------------------------------------------------- legacy exact routes
+
+def test_legacy_route_strings_resolve_to_engine_instantiations():
+    """Every legacy condensation route string is a deprecated alias for an
+    engine tuple: same plan cache entry, hence bit-identical results."""
+    from repro.core.engine import LEGACY_ROUTES
+    a = make_spd(20, 4)
+    for route, (schedule, update) in LEGACY_ROUTES.items():
+        if schedule == "mesh":
+            continue                          # exercised in the mesh tests
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            p_legacy = repro.plan((20, 20), method=route, k=8)
+        p_engine = repro.plan((20, 20), method="exact", schedule=schedule,
+                              update=update, k=8)
+        assert p_legacy.method == "exact"
+        assert p_legacy.config.schedule == schedule
+        assert p_legacy.config.update == update
+        assert p_legacy._fwd is p_engine._fwd, route   # bit-identical
+        legacy_res = p_legacy(a)
+        engine_res = p_engine(a)
+        assert float(legacy_res.sign) == float(engine_res.sign)
+        assert float(legacy_res.logabsdet) == float(engine_res.logabsdet)
+
+
+def test_legacy_mesh_route_strings_resolve_to_engine(mesh1):
+    a = make_spd(16, 6)
+    for route, update in (("pmc", "rank1"), ("pmc_blocked", "panel")):
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            p_legacy = repro.plan((16, 16), method=route, mesh=mesh1, k=8)
+        p_engine = repro.plan((16, 16), method="exact", schedule="mesh",
+                              update=update, k=8, mesh=mesh1)
+        assert p_legacy.config.schedule == "mesh"
+        assert p_legacy.config.update == update
+        assert p_legacy._fwd is p_engine._fwd, route
+        np.testing.assert_allclose(float(p_legacy(a).logabsdet),
+                                   np.linalg.slogdet(a)[1], rtol=1e-9)
+
+
+def test_legacy_route_rejects_conflicting_engine_axes():
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(TypeError, match="pins"):
+            repro.plan((16, 16), method="mc", schedule="staged")
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(TypeError, match="pins"):
+            repro.plan((16, 16), method="mc_blocked", update="rank1")
+
+
+def test_plan_cache_keys_on_resolved_kernel_backend(monkeypatch):
+    """backend='auto' is pinned at plan time: flipping the env override
+    must build a new executable, not serve the stale cached one."""
+    monkeypatch.delenv("REPRO_KERNEL_BACKEND", raising=False)
+    p1 = repro.plan((21, 21), method="exact", schedule="serial")
+    assert p1.config.backend in ("xla", "pallas")     # pinned, not "auto"
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "interpret")
+    p2 = repro.plan((21, 21), method="exact", schedule="serial")
+    assert p2.config.backend == "interpret"
+    assert p2._fwd is not p1._fwd
 
 
 def test_repeated_plan_calls_do_not_retrace():
@@ -285,7 +497,7 @@ def test_repeated_plan_calls_do_not_retrace():
 
 
 def test_exact_plan_does_not_retrace_either():
-    p = repro.plan((16, 16), method="mc")
+    p = repro.plan((16, 16), method="exact", schedule="serial")
     p(make_spd(16, 0))
     p(make_spd(16, 1))
     p(make_spd(16, 2))
@@ -298,25 +510,25 @@ def test_exact_plan_does_not_retrace_either():
 def test_legacy_shim_reuses_plan_cache():
     from repro.core.plan import _PLAN_CACHE
     a = make_spd(28, 5)
-    with pytest.warns(DeprecationWarning, match="slogdet"):
+    with pytest.warns(DeprecationWarning, match="deprecated"):
         from repro.core import slogdet
         s1, ld1 = slogdet(a, method="mc_staged")
     before = len(_PLAN_CACHE)
-    with pytest.warns(DeprecationWarning):
+    with pytest.warns(DeprecationWarning, match="deprecated"):
         s2, ld2 = slogdet(np.asarray(a) * 1.0, method="mc_staged")
     assert len(_PLAN_CACHE) == before         # second call: cache hit
     assert float(ld1) == float(ld2)
-    # and the shim agrees with the plan it wraps
-    res = repro.plan(a, method="mc_staged")()
+    # and the shim agrees with the engine plan it wraps
+    res = repro.plan(a, method="exact", schedule="staged")()
     assert float(res.logabsdet) == float(ld1)
 
 
 def test_legacy_logdet_batched_warns_and_matches():
     stack = np.stack([make_spd(24, s) for s in range(3)])
-    with pytest.warns(DeprecationWarning, match="logdet_batched"):
+    with pytest.warns(DeprecationWarning, match="deprecated"):
         from repro.core import logdet_batched
         legacy = logdet_batched(stack, method="mc")
-    res = repro.plan(stack, method="mc")()
+    res = repro.plan(stack, method="exact", schedule="serial")()
     np.testing.assert_array_equal(np.asarray(legacy),
                                   np.asarray(res.logabsdet))
 
@@ -386,7 +598,7 @@ def test_grad_prebuild_honored_on_cache_hit():
 
 def test_plan_logdet_fn_is_differentiable_exact():
     a = jnp.asarray(make_spd(12, 6))
-    p = repro.plan((12, 12), method="mc")
+    p = repro.plan((12, 12), method="exact")
     g = jax.grad(lambda x: p.logdet(x))(a)
     np.testing.assert_allclose(np.asarray(g),
                                np.linalg.inv(np.asarray(a)).T,
@@ -403,7 +615,7 @@ def test_plan_logdet_fn_composes_with_jit_and_vmap():
 
 def test_value_and_grad_exact():
     a = make_spd(16, 7)
-    res, bar = repro.plan(a, method="mc").value_and_grad()
+    res, bar = repro.plan(a, method="exact").value_and_grad()
     np.testing.assert_allclose(float(res.logabsdet),
                                np.linalg.slogdet(a)[1], rtol=1e-9)
     np.testing.assert_allclose(np.asarray(bar), np.linalg.inv(a).T,
