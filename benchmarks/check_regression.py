@@ -28,6 +28,12 @@ The exact-path records from ``benchmarks.condense_bench`` (keyed on
 ``bench_out/condense_baseline.json`` whenever that baseline is committed;
 being deterministic, they also sharpen the runner-speed probe.
 
+Beyond the baseline comparison, the fresh records are gated on their own
+observability fields (`gate_metrics`): a warm compiled plan reporting
+``retraces != 0`` fails (spec-stable executions must reuse one compiled
+executable), and estimator forward rows missing the ``probes`` field
+fail (accuracy comparisons must never be probe-blind).
+
 Refresh the baselines after a legitimate perf/accuracy change:
 
     PYTHONPATH=src python -m benchmarks.estimators_bench \
@@ -102,6 +108,42 @@ def _load(path: Path, gated_only: bool = True) -> dict:
             if not gated_only or r["n"] in GATED_N}
 
 
+ESTIMATORS = {"chebyshev", "slq"}
+
+
+def gate_metrics(fresh: dict, failures: list) -> int:
+    """Observability gates on the fresh records themselves (no baseline).
+
+    Warm compiled plans must not retrace (``retraces`` must be 0 — the
+    bench reports the plan's trace count after its timed loop), and every
+    estimator forward row must report the probe budget it ran
+    (``probes`` > 0) so accuracy comparisons are never probe-blind.
+    Returns the number of records checked.
+    """
+    checked = 0
+    for k, rec in sorted(fresh.items()):
+        flags = []
+        retraces = rec.get("retraces")
+        if retraces is not None:
+            checked += 1
+            if retraces != 0:
+                flags.append("RETRACE")
+                failures.append(
+                    f"{k}: warm plan retraced {retraces}x — spec-stable "
+                    "executions must reuse one compiled executable")
+        method = rec.get("method_used", rec.get("method"))
+        if method in ESTIMATORS and rec.get("pass", "fwd") == "fwd":
+            checked += 1
+            if not rec.get("probes"):
+                flags.append("NO PROBES FIELD")
+                failures.append(
+                    f"{k}: estimator row reports no 'probes' — rerun "
+                    "benchmarks.estimators_bench (it records probes used)")
+        if flags:
+            print(f"{str(k):56s} metrics: {', '.join(flags)}")
+    return checked
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fresh", type=Path,
@@ -127,6 +169,8 @@ def main(argv=None):
 
     failures: list = []
     compared = gate(baseline, fresh, speed, failures)
+    checked = gate_metrics(fresh, failures)
+    print(f"metrics gate: {checked} checks over fresh records")
 
     # ---- exact condensation routes (benchmarks.condense_bench) ----------
     if not args.skip_condense and args.condense_baseline.exists():

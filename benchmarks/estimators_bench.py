@@ -147,6 +147,12 @@ def _bench_auto(a, ld_ref, n_actual, structure, args):
            "operator": structure, "pass": "fwd", "seconds": t,
            "logdet_ref": ld_ref, "logdet": float(res.logabsdet),
            "rel_err": abs(float(res.logabsdet) - ld_ref) / abs(ld_ref)}
+    if p.method in ("chebyshev", "slq"):
+        rec["probes"] = int(p.config.num_probes)
+    if p.compiled:
+        # warm plan after the timed loop: anything beyond the first trace
+        # is a retrace (gated to 0 by check_regression)
+        rec["retraces"] = p.trace_count - 1
     if res.sem is not None and float(res.sem) > 0:
         rec["sem"] = float(res.sem)
     out = [rec]
@@ -242,6 +248,11 @@ def main(argv=None):
                     res = p_method(a)
                     ld = res.logabsdet
                     rec["sem"] = float(res.sem)
+                    rec["probes"] = int(p_method.config.num_probes)
+                if p_method.compiled:
+                    # warm plan: retraces beyond the first compile are a
+                    # regression (check_regression gates this at 0)
+                    rec["retraces"] = p_method.trace_count - 1
                 rec["logdet"] = float(ld)
                 rec["rel_err"] = abs(float(ld) - ld_ref) / abs(ld_ref)
                 records.append(rec)

@@ -53,6 +53,8 @@ def pad_to_multiple(a: jax.Array, mult: int) -> jax.Array:
 
 
 def _warn_deprecated(name: str, repl: str):
+    from repro import obs
+    obs.inc("compat.deprecated", fn=name)
     warnings.warn(
         f"repro.core.{name}() is deprecated: build a plan once with "
         f"repro.plan({repl}) and call it (docs/api.md has the migration "

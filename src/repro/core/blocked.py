@@ -15,6 +15,8 @@ than rank-1 MC at the same total bytes.
 """
 from __future__ import annotations
 
+import warnings
+
 from repro.core.engine import (
     EngineConfig,
     apply_panel,
@@ -40,10 +42,15 @@ def parallel_slogdet_mc_blocked(mesh, axis_name: str = "rows", *, k: int = 32,
     to its live rows; remainder rows use the rank-1 schedule and the
     P x P tail is gathered and solved redundantly (`engine.mesh_tail`).
 
-    ``lookahead`` is accepted for signature compatibility (the classic LU
-    lookahead reorder is a scheduler hint the engine does not need on the
-    XLA path).
+    ``lookahead`` is accepted for signature compatibility only; requesting
+    it warns — the panel schedule runs with no lookahead reorder (see
+    docs/api.md, "Known inert knobs").
     """
+    if lookahead:
+        warnings.warn(
+            "lookahead is not implemented: the mesh panel schedule runs "
+            "without the LU-style lookahead reorder; the flag is accepted "
+            "for signature compatibility only", UserWarning, stacklevel=2)
     cfg = EngineConfig(schedule="mesh", update="panel", panel_k=k,
                        backend="xla")
     return build_mesh(cfg, mesh, axis_name, gemm_fn=gemm_fn)

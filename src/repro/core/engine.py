@@ -57,6 +57,7 @@ from jax.sharding import PartitionSpec
 
 from repro._compat import (axis_size as _axis_size, pvary as _pvary,
                            shard_map as _shard_map)
+from repro import obs
 
 __all__ = [
     "EngineConfig", "LEGACY_ROUTES", "SCHEDULES", "UPDATES", "BACKENDS",
@@ -209,39 +210,42 @@ def _condense_step(buf: jax.Array, t, n_total: int, sign, logdet, *,
     col_ids = jnp.arange(n)
     live_col = col_ids < m
 
-    row = buf[t]                                        # (N,)
-    absrow = jnp.where(live_col, jnp.abs(row), -jnp.inf)
-    l = jnp.argmax(absrow)                              # pivot column (traced)
-    p = row[l]                                          # pivot value
+    with obs.stage("engine.pivot"):
+        row = buf[t]                                    # (N,)
+        absrow = jnp.where(live_col, jnp.abs(row), -jnp.inf)
+        l = jnp.argmax(absrow)                          # pivot column (traced)
+        p = row[l]                                      # pivot value
 
     # --- column swap l <-> m-1 (paper §2.4) --------------------------------
-    last = m - 1
-    col_l = buf[:, l]
-    col_last = buf[:, last]
-    buf = buf.at[:, l].set(col_last)
-    buf = buf.at[:, last].set(col_l)
-    swap_sign = jnp.where(l == last, 1.0, -1.0).astype(buf.dtype)
+    with obs.stage("engine.swap"):
+        last = m - 1
+        col_l = buf[:, l]
+        col_last = buf[:, last]
+        buf = buf.at[:, l].set(col_last)
+        buf = buf.at[:, last].set(col_l)
+        swap_sign = jnp.where(l == last, 1.0, -1.0).astype(buf.dtype)
 
-    # pivot row in swapped coordinates, normalized by the pivot (§2.3).
-    row = row.at[l].set(row[last])
-    # row[last] still holds the pre-swap value; the true pivot now sits at
-    # position `last` in the buffer.  Force it so pr[last] == 1 exactly, which
-    # zeroes the pivot column for all updated rows.
-    row = row.at[last].set(p)
-    safe_p = guarded_pivot(p, buf.dtype)
-    pr = jnp.where(p == 0, jnp.zeros_like(row), row / safe_p)
+        # pivot row in swapped coordinates, normalized by the pivot (§2.3).
+        row = row.at[l].set(row[last])
+        # row[last] still holds the pre-swap value; the true pivot now sits at
+        # position `last` in the buffer.  Force it so pr[last] == 1 exactly,
+        # which zeroes the pivot column for all updated rows.
+        row = row.at[last].set(p)
+        safe_p = guarded_pivot(p, buf.dtype)
+        pr = jnp.where(p == 0, jnp.zeros_like(row), row / safe_p)
 
-    # pivot column entries; zero at the pivot row so it is left untouched.
-    pc = buf[:, last]
-    pc = pc.at[t].set(0.0)
-    # Rows above t are dead; zero them too so the baseline buffer stays finite
-    # (cosmetic — they are never read again).
-    pc = jnp.where(jnp.arange(n) < t, 0.0, pc)
+        # pivot column entries; zero at the pivot row so it stays untouched.
+        pc = buf[:, last]
+        pc = pc.at[t].set(0.0)
+        # Rows above t are dead; zero them too so the baseline buffer stays
+        # finite (cosmetic — they are never read again).
+        pc = jnp.where(jnp.arange(n) < t, 0.0, pc)
 
-    if update_fn is None:
-        buf = buf - jnp.outer(pc, pr)
-    else:
-        buf = update_fn(buf, pc, pr)
+    with obs.stage("engine.update"):
+        if update_fn is None:
+            buf = buf - jnp.outer(pc, pr)
+        else:
+            buf = update_fn(buf, pc, pr)
 
     # sign bookkeeping: pivot sign, column swap, and Laplace expansion of the
     # pivot (active row 0, active column m-1) => (-1)^(m-1).
@@ -360,9 +364,10 @@ def panel_factor(panel: jax.Array, m0, *, r_pos=0, update_fn=None):
 
     zero = panel[0, 0] * 0
     ls0 = jnp.zeros((K,), jnp.int32) + (zero * 0).astype(jnp.int32)
-    R, ls, sign, logdet = lax.fori_loop(
-        0, K, body, (panel, ls0, zero + 1, zero)
-    )
+    with obs.stage("engine.panel_factor"):
+        R, ls, sign, logdet = lax.fori_loop(
+            0, K, body, (panel, ls0, zero + 1, zero)
+        )
     return R, ls, sign, logdet
 
 
@@ -408,9 +413,10 @@ def apply_panel(block: jax.Array, R: jax.Array, ls: jax.Array, m0,
     )
     C = Ct.T * row_mask[:, None]
 
-    if gemm_fn is None:
-        return block - C @ R
-    return gemm_fn(block, C, R)
+    with obs.stage("engine.panel_apply"):
+        if gemm_fn is None:
+            return block - C @ R
+        return gemm_fn(block, C, R)
 
 
 def _kernel_request(use_kernel) -> Optional[str]:
@@ -628,39 +634,43 @@ def mc_step_fn(axis_name: str, *, update_fn=None):
         mine = me == p
 
         # ---- owner: local pivot choice + row normalization (no comm) -------
-        row = local[i]
-        live_col = jnp.arange(N) < m
-        absrow = jnp.where(live_col, jnp.abs(row), -jnp.inf)
-        l = jnp.argmax(absrow)
-        pv = row[l]
-        # swap l <-> last inside the pivot row, normalize so pr[last] == 1
-        rl, rlast = row[l], row[last]
-        row = row.at[l].set(rlast).at[last].set(pv)
-        safe = guarded_pivot(pv, local.dtype)
-        pr = jnp.where(pv == 0, jnp.zeros_like(row), row / safe)
-        pr = pr.at[last].set(jnp.where(pv == 0, pr[last], 1.0))
+        with obs.stage("engine.pivot"):
+            row = local[i]
+            live_col = jnp.arange(N) < m
+            absrow = jnp.where(live_col, jnp.abs(row), -jnp.inf)
+            l = jnp.argmax(absrow)
+            pv = row[l]
+            # swap l <-> last inside the pivot row, normalize: pr[last] == 1
+            rl, rlast = row[l], row[last]
+            row = row.at[l].set(rlast).at[last].set(pv)
+            safe = guarded_pivot(pv, local.dtype)
+            pr = jnp.where(pv == 0, jnp.zeros_like(row), row / safe)
+            pr = pr.at[last].set(jnp.where(pv == 0, pr[last], 1.0))
 
         # ---- broadcast: ONE collective for (normalized row, column index) ---
-        pr_b, l_b = lax.psum(
-            (jnp.where(mine, pr, jnp.zeros_like(pr)),
-             jnp.where(mine, l, jnp.zeros_like(l))),
-            axis_name,
-        )
+        with obs.stage("engine.broadcast"):
+            pr_b, l_b = lax.psum(
+                (jnp.where(mine, pr, jnp.zeros_like(pr)),
+                 jnp.where(mine, l, jnp.zeros_like(l))),
+                axis_name,
+            )
 
         # ---- every device: column swap l_b <-> last on its block ------------
-        cl = jnp.take(local, l_b, axis=1)
-        clast = jnp.take(local, last, axis=1)
-        local = local.at[:, l_b].set(clast)
-        local = local.at[:, last].set(cl)
+        with obs.stage("engine.swap"):
+            cl = jnp.take(local, l_b, axis=1)
+            clast = jnp.take(local, last, axis=1)
+            local = local.at[:, l_b].set(clast)
+            local = local.at[:, last].set(cl)
 
         # ---- rank-1 condensation update on live rows -------------------------
-        pc = jnp.take(local, last, axis=1)
-        dead = i + (me <= p)                  # rows [0, dead) are retired
-        pc = jnp.where(jnp.arange(L) < dead, 0.0, pc)
-        if update_fn is None:
-            local = local - jnp.outer(pc, pr_b)
-        else:
-            local = update_fn(local, pc, pr_b)
+        with obs.stage("engine.update"):
+            pc = jnp.take(local, last, axis=1)
+            dead = i + (me <= p)              # rows [0, dead) are retired
+            pc = jnp.where(jnp.arange(L) < dead, 0.0, pc)
+            if update_fn is None:
+                local = local - jnp.outer(pc, pr_b)
+            else:
+                local = update_fn(local, pc, pr_b)
 
         # ---- owner accumulates its logdet/sign contribution ------------------
         r_pos = p * (L - 1 - i)               # live rows above the pivot row
@@ -703,15 +713,16 @@ def mesh_tail(local, sign, logdet, axis_name: str):
     """
     L, N = local.shape
     P = _axis_size(axis_name)
-    live = lax.dynamic_slice(local, (L - 1, 0), (1, N))[0, :]
-    tail = lax.all_gather(live, axis_name)          # (P, N): device-ordered
-    tail = lax.slice(tail, (0, 0), (P, P))          # live cols are prefix
-    tsign, tlogdet = condense_full(tail)            # redundant on all devs
+    with obs.stage("engine.mesh_tail"):
+        live = lax.dynamic_slice(local, (L - 1, 0), (1, N))[0, :]
+        tail = lax.all_gather(live, axis_name)      # (P, N): device-ordered
+        tail = lax.slice(tail, (0, 0), (P, P))      # live cols are prefix
+        tsign, tlogdet = condense_full(tail)        # redundant on all devs
 
-    logdet_total = lax.psum(logdet, axis_name) + tlogdet
-    signs = lax.all_gather(sign, axis_name)
-    sign_total = jnp.prod(signs) * tsign
-    return sign_total.reshape(1), logdet_total.reshape(1)
+        logdet_total = lax.psum(logdet, axis_name) + tlogdet
+        signs = lax.all_gather(sign, axis_name)
+        sign_total = jnp.prod(signs) * tsign
+        return sign_total.reshape(1), logdet_total.reshape(1)
 
 
 def _mesh_rank1_kernel(axis_name: str, update_fn=None):

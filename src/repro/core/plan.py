@@ -50,7 +50,9 @@ benchmarks.roofline --calibrate``).  Decision tree:
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import math
 import time
 import warnings
 from collections import OrderedDict
@@ -60,6 +62,8 @@ from typing import Any, Callable, Optional, Tuple
 import numpy as np
 import jax
 import jax.numpy as jnp
+
+from repro import obs
 
 from repro.core.calibration import (
     Calibration, estimator_cost, exact_cost, load_calibration,
@@ -90,6 +94,16 @@ def _is_tracer(x) -> bool:
         return isinstance(x, jax.core.Tracer)
     except AttributeError:  # pragma: no cover - future jax relocations
         return False
+
+
+def _mark_trace(trace_log: list) -> None:
+    """Record one trace of a compiled forward.  Runs inside the jitted
+    body, i.e. exactly once per (re)trace — the second and later marks on
+    one plan are retraces, the thing a spec-stable workload must not do."""
+    trace_log.append(1)
+    obs.inc("plan.traces")
+    if len(trace_log) > 1:
+        obs.inc("plan.retraces")
 
 
 # --------------------------------------------------------------------------
@@ -381,10 +395,12 @@ def _build_forward(spec: ProblemSpec, method: str, cfg: LogdetConfig,
         call = jax.vmap(wrapped) if spec.batch is not None else wrapped
 
         def fwd(a, key=None, probes=None):
-            trace_log.append(1)
-            a = jnp.asarray(a, dtype)
-            s, ld = call(a)
-            return s, ld, jnp.zeros(ld.shape, ld.dtype)
+            # body runs at trace time: the span measures staging cost
+            with obs.span("plan.compile", cat="trace", method=method):
+                _mark_trace(trace_log)
+                a = jnp.asarray(a, dtype)
+                s, ld = call(a)
+                return s, ld, jnp.zeros(ld.shape, ld.dtype)
 
         return jax.jit(fwd), True, padded_n
 
@@ -439,12 +455,14 @@ def _build_forward(spec: ProblemSpec, method: str, cfg: LogdetConfig,
 
     def fwd(a, key=None, probes=None, lmin=None, lmax=None):
         from repro import estimators as _est
-        trace_log.append(1)
-        a = jnp.asarray(a, dtype)
-        kw = _merge_bounds(est_kw, lmin, lmax, widen=False)
-        res = _est.estimate_logdet(a, method=method, key=key,
-                                   probes=probes, **kw)
-        return jnp.ones(res.est.shape, res.est.dtype), res.est, res.sem
+        # body runs at trace time: the span measures staging cost
+        with obs.span("plan.compile", cat="trace", method=method):
+            _mark_trace(trace_log)
+            a = jnp.asarray(a, dtype)
+            kw = _merge_bounds(est_kw, lmin, lmax, widen=False)
+            res = _est.estimate_logdet(a, method=method, key=key,
+                                       probes=probes, **kw)
+            return jnp.ones(res.est.shape, res.est.dtype), res.est, res.sem
 
     return jax.jit(fwd), True, padded_n
 
@@ -567,17 +585,36 @@ class LogdetPlan:
         x = self._input(a)
         self._check(x, key, probes, lmin, lmax)
         traced = any(_is_tracer(v) for v in (x, key, probes, lmin, lmax))
+        tele = not traced and obs.trace_enabled()
+        if tele:
+            # isolate this execution's telemetry from earlier buffered
+            # streams (direct estimator calls, interleaved plans)
+            obs.flush_telemetry()
+            obs.drain_telemetry()
         t0 = None if traced else time.perf_counter()
-        if self.method in EXACT_METHODS:
-            sign, ld, sem = self._fwd(x, key=None, probes=None)
-        else:
-            sign, ld, sem = self._fwd(x, key=key, probes=probes,
-                                      lmin=lmin, lmax=lmax)
-        diags = self.diagnostics
-        if not traced:
-            jax.block_until_ready(ld)
-            diags = dataclasses.replace(
-                diags, wall_time_s=time.perf_counter() - t0)
+        span = contextlib.nullcontext() if traced else \
+            obs.span("plan.execute", method=self.method)
+        with span:
+            if self.method in EXACT_METHODS:
+                sign, ld, sem = self._fwd(x, key=None, probes=None)
+            else:
+                sign, ld, sem = self._fwd(x, key=key, probes=probes,
+                                          lmin=lmin, lmax=lmax)
+            diags = self.diagnostics
+            if not traced:
+                jax.block_until_ready(ld)
+                wall = time.perf_counter() - t0
+                conv = None
+                if tele:
+                    obs.flush_telemetry()
+                    conv = obs.drain_telemetry() or None
+                    if conv:
+                        self._cache["last_convergence"] = conv
+                diags = dataclasses.replace(
+                    diags, wall_time_s=wall, convergence=conv)
+                obs.inc("plan.executions", method=self.method)
+                if self.method in ESTIMATOR_METHODS:
+                    obs.inc("estimator.probes", self.config.num_probes)
         return LogdetResult(sign=sign, logabsdet=ld, sem=sem,
                             method_used=self.method, diagnostics=diags)
 
@@ -614,20 +651,36 @@ class LogdetPlan:
         x = self._input(a)
         self._check(x, key, None)
         traced = _is_tracer(x) or _is_tracer(key)
+        tele = not traced and obs.trace_enabled()
+        if tele:
+            obs.flush_telemetry()
+            obs.drain_telemetry()
         t0 = None if traced else time.perf_counter()
-        vag = self._cache.get("vag")
-        if vag is None:
-            vag = _build_value_and_grad(
-                self.spec, self.method, self.config, self.mesh,
-                self.axis_name, jnp.dtype(self.spec.dtype), self._fwd)
-            self._cache["vag"] = vag
-        (sign, ld, sem), bar, cg_iters = vag(x, key=key)
-        diags = self.diagnostics
-        if not traced:
-            jax.block_until_ready(bar)
-            diags = dataclasses.replace(
-                diags, wall_time_s=time.perf_counter() - t0,
-                cg_iters=None if cg_iters is None else int(cg_iters))
+        span = contextlib.nullcontext() if traced else \
+            obs.span("plan.backward", method=self.method)
+        with span:
+            vag = self._cache.get("vag")
+            if vag is None:
+                vag = _build_value_and_grad(
+                    self.spec, self.method, self.config, self.mesh,
+                    self.axis_name, jnp.dtype(self.spec.dtype), self._fwd)
+                self._cache["vag"] = vag
+            (sign, ld, sem), bar, cg_iters = vag(x, key=key)
+            diags = self.diagnostics
+            if not traced:
+                jax.block_until_ready(bar)
+                wall = time.perf_counter() - t0
+                conv = None
+                if tele:
+                    obs.flush_telemetry()
+                    conv = obs.drain_telemetry() or None
+                    if conv:
+                        self._cache["last_convergence"] = conv
+                iters = None if cg_iters is None else int(cg_iters)
+                if iters is not None:
+                    obs.observe("cg.iters", iters, method=self.method)
+                diags = dataclasses.replace(
+                    diags, wall_time_s=wall, cg_iters=iters, convergence=conv)
         result = LogdetResult(sign=sign, logabsdet=ld, sem=sem,
                               method_used=self.method, diagnostics=diags)
         return result, bar
@@ -640,6 +693,56 @@ class LogdetPlan:
         or executed (eager mesh/operator plans).  A spec-stable workload
         through a compiled plan holds this at 1."""
         return len(self._trace_log)
+
+    def explain(self) -> str:
+        """Human-readable report of what this plan resolved to and what
+        it has observed: route, modeled cost, trace/retrace state, and —
+        after an execution under ``REPRO_OBS=trace`` — the most recent
+        convergence telemetry.  Purely observational; no device work.
+        """
+        spec, d = self.spec, self.diagnostics
+        shape = f"n={spec.n}" if spec.batch is None \
+            else f"batch={spec.batch} n={spec.n}"
+        lines = [
+            f"LogdetPlan[{self.method}]",
+            f"  spec: {spec.kind} {shape} dtype={spec.dtype} "
+            f"structure={spec.structure}",
+            f"  config: {self.config}",
+            f"  execution: {'compiled (jit)' if self.compiled else 'eager'}"
+            f", devices={d.device_count}"
+            + (f", padded {spec.n} -> {d.padded_n}"
+               if d.padded_n not in (None, spec.n) else ""),
+            f"  traces: {self.trace_count}"
+            + ("" if not self.compiled or self.trace_count <= 1
+               else f"  (RETRACED {self.trace_count - 1}x — check input "
+                    f"shapes/dtypes)"),
+            f"  modeled cost: flops_est={d.flops_est:.3g}"
+            + (f", matvec_cols={d.matvec_cols}"
+               if d.matvec_cols is not None else "")
+            + (f", backward cg_iters={d.cg_iters}"
+               if d.cg_iters is not None else ""),
+        ]
+        conv = self._cache.get("last_convergence")
+        if conv:
+            lines.append("  last convergence (REPRO_OBS=trace):")
+            for name, vals in sorted(conv.items()):
+                finite = [v for v in vals if math.isfinite(v)]
+                final = f"{finite[-1]:.3g}" if finite else "n/a"
+                lines.append(
+                    f"    {name}: {len(vals)} points, final {final}")
+        elif obs.trace_enabled() and self.method not in EXACT_METHODS:
+            lines.append("  last convergence: none recorded yet "
+                         "(execute the plan first)")
+        if obs.metrics_enabled():
+            hits = obs.counter_value("plan.cache.hits")
+            misses = obs.counter_value("plan.cache.misses")
+            lines.append(f"  obs[{obs.mode()}]: plan cache "
+                         f"{hits:g} hits / {misses:g} misses "
+                         f"(process-wide)")
+        else:
+            lines.append("  obs: off (set REPRO_OBS=metrics|trace for "
+                         "counters and convergence telemetry)")
+        return "\n".join(lines)
 
     def _input(self, a):
         if a is None:
@@ -855,6 +958,8 @@ def plan(x, *, method: str = "auto", mesh=None, axis_name: str = "rows",
         # validate is call-time behavior, not part of the compiled artifact
         cache_key = (spec, method, cfg, mesh, axis_name)
         cached = _PLAN_CACHE.get(cache_key)
+        obs.inc("plan.cache.hits" if cached is not None
+                else "plan.cache.misses")
         if cached is not None:
             _PLAN_CACHE.move_to_end(cache_key)
             if grad and "vag" not in cached._cache:
@@ -876,21 +981,23 @@ def plan(x, *, method: str = "auto", mesh=None, axis_name: str = "rows",
         devices = int(mesh.shape[axis_name])
     else:
         devices = spec.device_count
-    trace_log: list = []
-    dtype = jnp.dtype(spec.dtype)
-    fwd, compiled, padded_n = _build_forward(
-        spec, method, cfg, mesh, axis_name, dtype, trace_log)
-    cols, flops = _flops_est(method, spec, cfg, devices)
-    p = LogdetPlan(
-        spec=spec, method=method, config=cfg, mesh=mesh,
-        axis_name=axis_name, grad=grad, validate=validate,
-        compiled=compiled,
-        diagnostics=Diagnostics(matvec_cols=cols, flops_est=flops,
-                                padded_n=padded_n, device_count=devices),
-        _fwd=fwd, _trace_log=trace_log)
-    if grad:
-        p._cache["vag"] = _build_value_and_grad(
-            spec, method, cfg, mesh, axis_name, dtype, fwd)
+    with obs.span("plan.build", method=method, n=spec.n):
+        trace_log: list = []
+        dtype = jnp.dtype(spec.dtype)
+        fwd, compiled, padded_n = _build_forward(
+            spec, method, cfg, mesh, axis_name, dtype, trace_log)
+        cols, flops = _flops_est(method, spec, cfg, devices)
+        p = LogdetPlan(
+            spec=spec, method=method, config=cfg, mesh=mesh,
+            axis_name=axis_name, grad=grad, validate=validate,
+            compiled=compiled,
+            diagnostics=Diagnostics(matvec_cols=cols, flops_est=flops,
+                                    padded_n=padded_n, device_count=devices),
+            _fwd=fwd, _trace_log=trace_log)
+        if grad:
+            p._cache["vag"] = _build_value_and_grad(
+                spec, method, cfg, mesh, axis_name, dtype, fwd)
+    obs.set_gauge("plan.flops_est", flops, method=method)
     if cache_key is not None:
         _PLAN_CACHE[cache_key] = p
         while len(_PLAN_CACHE) > _PLAN_CACHE_SIZE:

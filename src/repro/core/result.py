@@ -15,8 +15,8 @@ drop-in migration from the old pair return::
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Optional
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
 
 import jax
 
@@ -42,6 +42,10 @@ class Diagnostics:
     ``padded_n``      problem size after `pad_to_multiple` embedding
                       (== n when no padding was needed).
     ``device_count``  devices the execution spanned (mesh size, else 1).
+    ``convergence``   convergence telemetry streams from this execution
+                      (``{"slq.sem": [...], "cg.resnorm": [...]}``) —
+                      populated only under ``REPRO_OBS=trace``, else
+                      None.  See docs/observability.md.
     """
     matvec_cols: Optional[int] = None
     flops_est: Optional[float] = None
@@ -49,6 +53,8 @@ class Diagnostics:
     wall_time_s: Optional[float] = None
     padded_n: Optional[int] = None
     device_count: int = 1
+    convergence: Optional[Dict[str, List[float]]] = field(
+        default=None, compare=False)
 
 
 @dataclass(frozen=True)

@@ -29,6 +29,7 @@ from jax import lax
 
 from repro.estimators.hutchinson import TraceEstimate, make_probes, mean_sem
 from repro.estimators.operators import as_operator
+from repro.obs import telemetry as _telemetry
 
 __all__ = ["spectral_bounds", "chebyshev_coeffs_log", "logdet_chebyshev"]
 
@@ -142,4 +143,6 @@ def logdet_chebyshev(a, *, degree: int = 64, num_probes: int = 32,
 
     _, _, samples = lax.fori_loop(2, degree + 1, body, (w_prev, w, samples))
     est, sem = mean_sem(samples)
+    # REPRO_OBS=trace: ship the sem-vs-probes curve to the host buffer
+    _telemetry.emit_curve("chebyshev.sem", _telemetry.running_sem(samples))
     return TraceEstimate(est, sem, samples)

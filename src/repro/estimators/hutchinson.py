@@ -17,6 +17,8 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.obs import telemetry as _telemetry
+
 __all__ = ["make_probes", "mean_sem", "hutchinson_trace", "TraceEstimate"]
 
 PROBE_KINDS = ("rademacher", "gaussian")
@@ -69,4 +71,6 @@ def hutchinson_trace(mm, probes: jax.Array) -> TraceEstimate:
     """
     samples = (probes * mm(probes)).sum(-2)          # v_i^T A v_i per column
     est, sem = mean_sem(samples)
+    # REPRO_OBS=trace: ship the sem-vs-probes curve to the host buffer
+    _telemetry.emit_curve("hutchinson.sem", _telemetry.running_sem(samples))
     return TraceEstimate(est, sem, samples)

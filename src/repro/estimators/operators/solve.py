@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.obs import telemetry as _telemetry
+
 __all__ = ["CGResult", "cg_solve"]
 
 
@@ -121,6 +123,9 @@ def cg_solve(a, b, *, tol: float = 1e-10, atol: float = 0.0,
         rz_new = (r * z).sum(-2)
         beta = _safe_div(rz_new, rz)[..., None, :]
         p = z + beta * p
+        # REPRO_OBS=trace: worst-column residual per iteration; callbacks
+        # may land out of order, so the step index rides along
+        _telemetry.emit_point("cg.resnorm", jnp.max(resnorm(r)), it)
         return x, r, p, rz_new, it + 1
 
     x, r, _, _, it = lax.while_loop(

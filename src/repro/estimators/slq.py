@@ -29,6 +29,7 @@ from jax import lax
 
 from repro.estimators.hutchinson import TraceEstimate, make_probes, mean_sem
 from repro.estimators.operators import as_operator
+from repro.obs import telemetry as _telemetry
 
 __all__ = ["lanczos", "logdet_slq"]
 
@@ -128,6 +129,8 @@ def logdet_slq(a, *, num_steps: int = 25, num_probes: int = 32,
     # For Rademacher probes ||v||^2 == n exactly (the classical n * quad).
     samples = (v0 * v0).sum(-2) * quad
     est, sem = mean_sem(samples)
+    # REPRO_OBS=trace: ship the sem-vs-probes curve to the host buffer
+    _telemetry.emit_curve("slq.sem", _telemetry.running_sem(samples))
     return TraceEstimate(est, sem, samples)
 
 

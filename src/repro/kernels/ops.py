@@ -29,6 +29,7 @@ from typing import Optional
 
 import jax
 
+from repro import obs
 from repro.kernels import ref as _ref
 from repro.kernels.condense_step import rank1_update_pallas
 from repro.kernels.matvec import matvec_pallas
@@ -79,18 +80,23 @@ def rank1_update(a: jax.Array, pc: jax.Array, pr: jax.Array, *,
                  backend: Optional[str] = None, **kw) -> jax.Array:
     """Fused a -= outer(pc, pr); backend per `_dispatch`."""
     b = _dispatch(backend)
-    if b == "xla":
-        return _ref.rank1_update_ref(a, pc, pr)
-    return rank1_update_pallas(a, pc, pr, interpret=b == "interpret", **kw)
+    obs.inc("kernel.dispatch", op="rank1_update", backend=b)
+    with obs.stage("kernel.rank1_update", backend=b):
+        if b == "xla":
+            return _ref.rank1_update_ref(a, pc, pr)
+        return rank1_update_pallas(a, pc, pr, interpret=b == "interpret",
+                                   **kw)
 
 
 def panel_update(a: jax.Array, c: jax.Array, r: jax.Array, *,
                  backend: Optional[str] = None, **kw) -> jax.Array:
     """Fused a -= c @ r; backend per `_dispatch`."""
     b = _dispatch(backend)
-    if b == "xla":
-        return _ref.panel_update_ref(a, c, r)
-    return panel_update_pallas(a, c, r, interpret=b == "interpret", **kw)
+    obs.inc("kernel.dispatch", op="panel_update", backend=b)
+    with obs.stage("kernel.panel_update", backend=b):
+        if b == "xla":
+            return _ref.panel_update_ref(a, c, r)
+        return panel_update_pallas(a, c, r, interpret=b == "interpret", **kw)
 
 
 def matvec(a: jax.Array, x: jax.Array, *, backend: Optional[str] = None,
@@ -104,23 +110,27 @@ def matvec(a: jax.Array, x: jax.Array, *, backend: Optional[str] = None,
     reference (``pallas`` off-TPU degrades to interpret via `_dispatch`).
     """
     b = _dispatch(backend)
-    if b == "pallas":
-        return matvec_pallas(a, x, **kw)
-    if b == "interpret":
-        return matvec_pallas(a, x, interpret=True, **kw)
-    return _ref.matvec_ref(a, x)
+    obs.inc("kernel.dispatch", op="matvec", backend=b)
+    with obs.stage("kernel.matvec", backend=b):
+        if b == "pallas":
+            return matvec_pallas(a, x, **kw)
+        if b == "interpret":
+            return matvec_pallas(a, x, interpret=True, **kw)
+        return _ref.matvec_ref(a, x)
 
 
 def stencil_mv(bands: jax.Array, x: jax.Array, *, offsets: tuple,
                backend: Optional[str] = None, **kw) -> jax.Array:
     """Banded stencil matvec; same dispatch policy as `matvec`."""
     b = _dispatch(backend)
-    if b == "pallas":
-        return stencil_mv_pallas(bands, x, offsets=offsets, **kw)
-    if b == "interpret":
-        return stencil_mv_pallas(bands, x, offsets=offsets, interpret=True,
-                                 **kw)
-    return _ref.stencil_mv_ref(bands, x, offsets=offsets)
+    obs.inc("kernel.dispatch", op="stencil_mv", backend=b)
+    with obs.stage("kernel.stencil_mv", backend=b):
+        if b == "pallas":
+            return stencil_mv_pallas(bands, x, offsets=offsets, **kw)
+        if b == "interpret":
+            return stencil_mv_pallas(bands, x, offsets=offsets,
+                                     interpret=True, **kw)
+        return _ref.stencil_mv_ref(bands, x, offsets=offsets)
 
 
 def panel_factor_vmem(panel: jax.Array, m0, r_pos=0, *,
@@ -131,7 +141,10 @@ def panel_factor_vmem(panel: jax.Array, m0, r_pos=0, *,
     factorization (same numerics, XLA-fused) instead of the interpreter.
     """
     b = _dispatch(backend)
-    if b == "xla":
-        from repro.core.engine import panel_factor
-        return panel_factor(panel, m0, r_pos=r_pos)
-    return panel_factor_pallas(panel, m0, r_pos, interpret=b == "interpret")
+    obs.inc("kernel.dispatch", op="panel_factor_vmem", backend=b)
+    with obs.stage("kernel.panel_factor_vmem", backend=b):
+        if b == "xla":
+            from repro.core.engine import panel_factor
+            return panel_factor(panel, m0, r_pos=r_pos)
+        return panel_factor_pallas(panel, m0, r_pos,
+                                   interpret=b == "interpret")

@@ -5,6 +5,14 @@
 Runs a real token-generation loop on the smoke configs (greedy or top-k
 sampling), with the same prefill/decode step functions the dry-run lowers at
 production shapes.
+
+``--metrics-port N`` exposes the `repro.obs` metrics registry over HTTP
+(``GET /metrics``, Prometheus text format) for the duration of the run —
+the first concrete piece of the ROADMAP serving direction.  Request and
+token counters are recorded regardless of ``REPRO_OBS`` *mode* only when
+metrics are enabled; run with ``REPRO_OBS=metrics`` (or ``trace``) to see
+non-empty output.  ``--metrics-hold S`` keeps the process (and endpoint)
+alive S seconds after generation so a scraper can collect.
 """
 from __future__ import annotations
 
@@ -16,6 +24,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.configs.registry import ARCHS, get_config
 from repro.models import model as M
 
@@ -56,7 +65,19 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve repro.obs metrics on http://127.0.0.1:PORT"
+                         "/metrics (0 picks a free port)")
+    ap.add_argument("--metrics-hold", type=float, default=0.0, metavar="S",
+                    help="keep the process alive S seconds after generation "
+                         "so the /metrics endpoint can be scraped")
     args = ap.parse_args(argv)
+
+    server = None
+    if args.metrics_port is not None:
+        server = obs.start_metrics_server(args.metrics_port)
+        host, port = server.server_address[:2]
+        print(f"metrics: http://{host}:{port}/metrics")
 
     cfg = get_config(args.arch, smoke=True).replace(remat=False)
     rng = np.random.default_rng(0)
@@ -75,13 +96,21 @@ def main(argv=None):
 
     max_len = args.prompt_len + args.gen
     t0 = time.time()
-    toks = generate(params, cfg, prompt, max_len=max_len, gen=args.gen,
-                    temperature=args.temperature, extras=extras)
-    toks.block_until_ready()
+    with obs.span("serve.generate", arch=args.arch, batch=args.batch,
+                  gen=args.gen):
+        toks = generate(params, cfg, prompt, max_len=max_len, gen=args.gen,
+                        temperature=args.temperature, extras=extras)
+        toks.block_until_ready()
     dt = time.time() - t0
+    obs.inc("serve.requests", arch=args.arch)
+    obs.inc("serve.tokens", args.batch * args.gen, arch=args.arch)
+    obs.set_gauge("serve.tok_per_s", args.batch * args.gen / dt,
+                  arch=args.arch)
     print(f"{args.arch}: generated {args.batch}x{args.gen} tokens "
           f"in {dt:.2f}s ({args.batch * args.gen / dt:.1f} tok/s incl. compile)")
     print("sample:", np.asarray(toks[0, args.prompt_len:]))
+    if server is not None and args.metrics_hold > 0:
+        time.sleep(args.metrics_hold)
     return toks
 
 

@@ -1,0 +1,447 @@
+"""repro.obs — spans, metrics, telemetry, exporters, and the off-mode
+overhead contract.
+
+Everything here runs in-process by flipping the obs mode with
+``obs.configure``; the ``obs_state`` fixture restores ``off`` and clears
+all buffers around every test so the rest of the suite sees the default
+(uninstrumented) behaviour.  Tests that execute plans use matrix sizes
+unique to this file (37/41/43/47/53/59/61) so the module-level jit caches
+never serve a stale trace from another test.
+"""
+import json
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro
+from repro import obs
+from repro.core.plan import clear_plan_cache
+
+
+@pytest.fixture(autouse=True)
+def obs_state():
+    """Reset obs to a clean 'off' state before and after each test."""
+    obs.reset()
+    obs.configure("off")
+    yield
+    obs.reset()
+    obs.configure("off")
+
+
+def _spd(n, seed=0):
+    rng = np.random.default_rng(seed)
+    m = rng.standard_normal((n, n))
+    return jnp.asarray(m @ m.T + n * np.eye(n))
+
+
+# ------------------------------------------------------------------ config
+def test_default_mode_off():
+    assert obs.mode() == "off"
+    assert not obs.metrics_enabled()
+    assert not obs.trace_enabled()
+
+
+def test_configure_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="choose one of"):
+        obs.configure("verbose")
+
+
+def test_mode_levels():
+    obs.configure("metrics")
+    assert obs.metrics_enabled() and not obs.trace_enabled()
+    obs.configure("trace")
+    assert obs.metrics_enabled() and obs.trace_enabled()
+
+
+# ------------------------------------------------------------------- spans
+def test_span_noop_when_off():
+    with obs.span("outer"):
+        with obs.span("inner"):
+            pass
+    assert obs.events() == []
+
+
+def test_span_nesting_and_ordering():
+    obs.configure("trace")
+    with obs.span("outer"):
+        with obs.span("inner.a"):
+            pass
+        with obs.span("inner.b"):
+            pass
+    evs = obs.events()
+    by_name = {e["name"]: e for e in evs}
+    # children are recorded on exit, before the parent
+    assert [e["name"] for e in evs] == ["inner.a", "inner.b", "outer"]
+    assert by_name["outer"]["depth"] == 0
+    assert by_name["inner.a"]["depth"] == 1
+    assert by_name["inner.b"]["depth"] == 1
+    # time containment: children inside the parent interval
+    o = by_name["outer"]
+    for child in ("inner.a", "inner.b"):
+        c = by_name[child]
+        assert c["ts"] >= o["ts"]
+        assert c["ts"] + c["dur"] <= o["ts"] + o["dur"] + 1e-3
+    # siblings ordered in time
+    assert by_name["inner.a"]["ts"] <= by_name["inner.b"]["ts"]
+
+
+def test_span_sync_blocks_even_when_off():
+    """span(sync=...) must block on device work in EVERY mode, so the
+    wall times reported on Diagnostics never measure dispatch alone."""
+    blocked = []
+
+    class Fake:
+        def block_until_ready(self):
+            blocked.append(1)
+            return self
+
+    with obs.span("timed", sync=Fake()):
+        pass
+    assert blocked, "sync value was not blocked on with obs off"
+
+
+def test_stage_is_named_scope_when_off():
+    # with obs off, stage() must still be a usable context manager (it is
+    # the bare jax.named_scope) and must record nothing
+    with obs.stage("engine.pivot"):
+        pass
+    assert obs.events() == []
+
+
+def test_stage_records_event_in_trace_mode():
+    obs.configure("trace")
+    with obs.stage("engine.pivot", k=3):
+        pass
+    evs = obs.events()
+    assert len(evs) == 1 and evs[0]["name"] == "engine.pivot"
+    assert evs[0]["cat"] == "stage"
+
+
+# ----------------------------------------------------------------- metrics
+def test_metrics_noop_when_off():
+    obs.inc("x")
+    obs.set_gauge("g", 1.0)
+    obs.observe("h", 2.0)
+    snap = obs.snapshot()
+    assert snap == {"counters": {}, "gauges": {}, "histograms": {}}
+
+
+def test_counters_gauges_histograms():
+    obs.configure("metrics")
+    obs.inc("hits")
+    obs.inc("hits", 2)
+    obs.set_gauge("flops", 1e9, method="exact")
+    for v in (1.0, 3.0, 2.0):
+        obs.observe("iters", v)
+    snap = obs.snapshot()
+    assert snap["counters"]["hits"] == 3.0
+    assert snap["gauges"]["flops{method=exact}"] == 1e9
+    h = snap["histograms"]["iters"]
+    assert h == {"count": 3.0, "sum": 6.0, "min": 1.0, "max": 3.0}
+    assert obs.counter_value("hits") == 3.0
+    assert obs.counter_value("never.touched") == 0.0
+
+
+def test_prometheus_text_format():
+    obs.configure("metrics")
+    obs.inc("plan.cache.hits")
+    obs.set_gauge("serve.tok_per_s", 12.5, arch="a-b")
+    obs.observe("cg.iters", 7.0)
+    text = obs.prometheus_text()
+    assert "# TYPE repro_plan_cache_hits_total counter" in text
+    assert "repro_plan_cache_hits_total 1" in text
+    assert 'repro_serve_tok_per_s{arch="a-b"} 12.5' in text
+    assert "repro_cg_iters_count 1" in text
+    assert "repro_cg_iters_sum 7" in text
+    assert text.endswith("\n")
+
+
+def test_metrics_http_endpoint():
+    obs.configure("metrics")
+    obs.inc("serve.requests")
+    server = obs.start_metrics_server(0)
+    try:
+        port = server.server_address[1]
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{port}/metrics", timeout=10) as r:
+            body = r.read().decode()
+            ctype = r.headers.get("Content-Type", "")
+        assert "repro_serve_requests_total 1" in body
+        assert "text/plain" in ctype
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(
+                f"http://127.0.0.1:{port}/nope", timeout=10)
+    finally:
+        server.shutdown()
+
+
+# ----------------------------------------------------------- plan counters
+def test_plan_cache_hit_miss_counters():
+    obs.configure("metrics")
+    clear_plan_cache()
+    a = _spd(41)
+    repro.plan(a, method="exact")
+    assert obs.counter_value("plan.cache.misses") == 1.0
+    assert obs.counter_value("plan.cache.hits") == 0.0
+    repro.plan(a, method="exact")
+    assert obs.counter_value("plan.cache.misses") == 1.0
+    assert obs.counter_value("plan.cache.hits") == 1.0
+
+
+def test_cached_plan_does_not_retrace():
+    obs.configure("metrics")
+    clear_plan_cache()
+    a = _spd(43)
+    p = repro.plan(a, method="exact")
+    before = obs.counter_value("plan.retraces")
+    for _ in range(3):
+        p(a)
+    assert p.trace_count == 1
+    assert obs.counter_value("plan.retraces") == before
+    assert obs.counter_value("plan.executions", method="exact") == 3.0
+
+
+def test_deprecated_shim_counter():
+    obs.configure("metrics")
+    a = _spd(37, seed=1)
+    with pytest.warns(DeprecationWarning):
+        repro.core.slogdet(a, method="ge")
+    assert obs.counter_value("compat.deprecated", fn="slogdet") == 1.0
+
+
+# --------------------------------------------------------------- telemetry
+def test_running_sem_matches_numpy():
+    x = jnp.asarray(np.random.default_rng(3).standard_normal(16))
+    sem = np.asarray(obs.running_sem(x))
+    assert sem.shape == (16,)
+    assert np.isinf(sem[0])
+    for j in (2, 7, 16):
+        ref = np.std(np.asarray(x)[:j], ddof=1) / np.sqrt(j)
+        assert sem[j - 1] == pytest.approx(ref, rel=1e-6)
+
+
+def test_convergence_trace_length_equals_probes():
+    obs.configure("trace")
+    a = _spd(47)
+    p = repro.plan(a, method="chebyshev", num_probes=8)
+    res = p(a)
+    conv = res.diagnostics.convergence
+    assert conv is not None and "chebyshev.sem" in conv
+    assert len(conv["chebyshev.sem"]) == 8
+    # curve is a running sem: entry 0 has no spread estimate
+    assert not np.isfinite(conv["chebyshev.sem"][0])
+    assert all(np.isfinite(v) for v in conv["chebyshev.sem"][1:])
+
+
+def test_slq_convergence_trace():
+    obs.configure("trace")
+    a = _spd(53)
+    p = repro.plan(a, method="slq", num_probes=6)
+    res = p(a)
+    conv = res.diagnostics.convergence
+    assert conv is not None
+    assert len(conv["slq.sem"]) == 6
+
+
+def test_no_convergence_when_off():
+    a = _spd(47, seed=2)
+    p = repro.plan(a, method="chebyshev", num_probes=4)
+    res = p(a)
+    assert res.diagnostics.convergence is None
+
+
+def test_cg_residual_stream():
+    from repro.estimators.operators.solve import cg_solve
+
+    obs.configure("trace")
+    a = _spd(37, seed=4)
+    b = jnp.ones((37,), a.dtype)
+    cg_solve(a, b, tol=1e-8)
+    obs.flush_telemetry()
+    streams = obs.drain_telemetry()
+    resid = streams.get("cg.resnorm")
+    assert resid, "CG emitted no residual telemetry"
+    # converged: final residual far below the first
+    assert resid[-1] < 1e-6 * max(resid[0], 1.0)
+
+
+# ------------------------------------------------- off-mode overhead (HLO)
+def test_hlo_has_no_callbacks_when_off():
+    from repro.estimators.chebyshev import logdet_chebyshev
+
+    a = _spd(41, seed=5)
+
+    def f(x):
+        return logdet_chebyshev(x, degree=8, num_probes=4)[0]
+
+    txt = jax.jit(f).lower(a).as_text()
+    assert "callback" not in txt.lower()
+
+
+def test_hlo_has_callbacks_when_tracing():
+    from repro.estimators.chebyshev import logdet_chebyshev
+
+    obs.configure("trace")
+    a = _spd(41, seed=6)
+
+    def f(x):
+        return logdet_chebyshev(x, degree=8, num_probes=4)[0]
+
+    txt = jax.jit(f).lower(a).as_text()
+    assert "callback" in txt.lower()
+
+
+# ------------------------------------------------------- wall-time honesty
+def test_timeit_blocks_on_device_work():
+    """benchmarks._common.timeit must include device time, not dispatch:
+    jax.block_until_ready recurses into any object exposing
+    block_until_ready, so a sleeping fake is indistinguishable from an
+    unfinished device buffer."""
+    import time as _time
+
+    from benchmarks._common import timeit
+
+    calls = []
+
+    class Slow:
+        def block_until_ready(self):
+            _time.sleep(0.02)
+            calls.append(1)
+            return self
+
+    t = timeit(lambda: Slow(), warmup=1, iters=3)
+    assert len(calls) == 4          # every call blocked, warmup included
+    assert t >= 0.015               # median reflects the "device" time
+
+
+# --------------------------------------------------------------- exporters
+def test_chrome_trace_export_and_validate(tmp_path):
+    obs.configure("trace")
+    with obs.span("plan.build"):
+        with obs.stage("engine.pivot"):
+            pass
+    path = tmp_path / "trace.json"
+    obs.export_chrome_trace(path)
+    doc = json.loads(path.read_text())
+    assert doc["displayTimeUnit"] == "ms"
+    for ev in doc["traceEvents"]:
+        assert ev["ph"] == "X"
+        assert set(ev) >= {"name", "cat", "ts", "dur", "pid", "tid"}
+    info = obs.validate_chrome_trace(path)
+    assert set(info["names"]) >= {"plan.build", "engine.pivot"}
+    assert info["max_depth"] >= 1
+
+
+def test_validate_rejects_garbage(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text('{"traceEvents": [{"ph": "X"}]}')
+    with pytest.raises(ValueError):
+        obs.validate_chrome_trace(bad)
+
+
+def test_write_all_artifacts(tmp_path):
+    obs.configure("trace")
+    with obs.span("plan.build"):
+        pass
+    obs.inc("plan.cache.misses")
+    paths = obs.write_all(tmp_path)
+    written = {p.name for p in tmp_path.iterdir()}
+    assert {"trace.json", "events.jsonl", "metrics.prom"} <= written
+    assert paths
+    lines = [json.loads(ln) for ln in
+             (tmp_path / "events.jsonl").read_text().splitlines()]
+    assert any(rec.get("name") == "plan.build" for rec in lines)
+
+
+def test_plan_execute_trace_end_to_end(tmp_path):
+    """The acceptance path in miniature: plan build/execute under trace
+    produces a validating Chrome trace with nested engine stages."""
+    obs.configure("trace")
+    clear_plan_cache()
+    a = _spd(59)
+    p = repro.plan(a, method="exact")
+    p(a)
+    path = tmp_path / "trace.json"
+    obs.export_chrome_trace(path)
+    info = obs.validate_chrome_trace(path)
+    names = set(info["names"])
+    assert {"plan.build", "plan.compile", "plan.execute"} <= names
+    assert any(n.startswith("engine.") for n in names)
+    assert info["max_depth"] >= 1
+
+
+def test_explain_reports_execution_and_obs_state():
+    obs.configure("metrics")
+    clear_plan_cache()
+    a = _spd(61)
+    p = repro.plan(a, method="exact")
+    p(a)
+    txt = p.explain()
+    assert "LogdetPlan[exact]" in txt
+    assert "traces: 1" in txt
+    assert "RETRACED" not in txt
+
+
+# ------------------------------------------------------------- inert knobs
+def test_lookahead_warns(mesh1):
+    from repro.core.blocked import parallel_slogdet_mc_blocked
+
+    with pytest.warns(UserWarning, match="lookahead is not implemented"):
+        parallel_slogdet_mc_blocked(mesh1, lookahead=True)
+    # default path stays silent
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        parallel_slogdet_mc_blocked(mesh1)
+
+
+# ------------------------------------------------------------- environment
+def test_env_var_drives_mode_and_artifacts(tmp_path):
+    """REPRO_OBS=trace in the environment: spans recorded with no code
+    changes and artifacts dumped at interpreter exit."""
+    import os
+    import subprocess
+    import sys
+
+    from tests._subproc import SRC
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env["REPRO_OBS"] = "trace"
+    env["REPRO_OBS_DIR"] = str(tmp_path)
+    code = (
+        "import numpy as np, jax.numpy as jnp, repro\n"
+        "m = np.random.default_rng(0).standard_normal((24, 24))\n"
+        "a = jnp.asarray(m @ m.T + 24 * np.eye(24))\n"
+        "p = repro.plan(a, method='exact')\n"
+        "print(p(a).logabsdet)\n"
+    )
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    info = obs.validate_chrome_trace(tmp_path / "trace.json")
+    assert {"plan.build", "plan.execute"} <= set(info["names"])
+    assert (tmp_path / "metrics.prom").read_text().strip()
+
+
+def test_bad_env_value_is_a_hard_error():
+    import os
+    import subprocess
+    import sys
+
+    from tests._subproc import SRC
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env["REPRO_OBS"] = "loud"
+    proc = subprocess.run(
+        [sys.executable, "-c", "import repro.obs"], env=env,
+        capture_output=True, text=True, timeout=600)
+    assert proc.returncode != 0
+    assert "REPRO_OBS" in proc.stderr
