@@ -34,6 +34,14 @@ observability fields (`gate_metrics`): a warm compiled plan reporting
 executable), and estimator forward rows missing the ``probes`` field
 fail (accuracy comparisons must never be probe-blind).
 
+The serving-path records from ``benchmarks.serve_bench`` are gated by
+`gate_serve` whenever ``bench_out/serve_baseline.json`` is committed:
+batched-service throughput must stay >= 3x the one-request-at-a-time
+naive path (a ratio inside one fresh run, so no machine calibration),
+the service modes must report zero executable traces during the timed
+region, and absolute throughput is floored against the baseline with the
+naive mode as the runner-speed probe.
+
 Refresh the baselines after a legitimate perf/accuracy change:
 
     PYTHONPATH=src python -m benchmarks.estimators_bench \
@@ -41,6 +49,8 @@ Refresh the baselines after a legitimate perf/accuracy change:
     cp bench_out/estimators.json bench_out/estimators_baseline.json
     PYTHONPATH=src python -m benchmarks.condense_bench --sizes 256,512
     cp bench_out/condense.json bench_out/condense_baseline.json
+    PYTHONPATH=src python -m benchmarks.serve_bench
+    cp bench_out/serve.json bench_out/serve_baseline.json
 """
 from __future__ import annotations
 
@@ -56,6 +66,13 @@ TIME_SLACK = 0.25
 ERR_FACTOR = 3.0
 ERR_FLOOR = 1e-8
 EXACT = {"mc", "mc_staged", "mc_blocked", "ge"}
+
+# serving gate (benchmarks.serve_bench): the batched service must beat
+# the one-request-at-a-time path by this factor — a *ratio within one
+# fresh run*, so it needs no machine calibration — and the service modes
+# must report zero executable traces inside the timed region
+SERVE_SPEEDUP_MIN = 3.0
+SERVE_ERR_MAX = 1e-8
 
 
 def speed_ratio(baseline: dict, fresh: dict) -> float:
@@ -144,6 +161,74 @@ def gate_metrics(fresh: dict, failures: list) -> int:
     return checked
 
 
+def gate_serve(fresh_path: Path, baseline_path: Path,
+               failures: list) -> int:
+    """Gate the serving-path records (benchmarks.serve_bench).
+
+    Three checks: (1) batched >= SERVE_SPEEDUP_MIN x naive throughput
+    within the fresh run (ratio-based — machine independent); (2) the
+    service modes ran with zero executable traces in the timed region
+    (the whole point of warm bucketed plans); (3) throughput hasn't
+    collapsed vs the committed baseline, calibrated by the naive mode
+    as the runner-speed probe (naive shares no serving code, so a
+    serving regression cannot normalize itself away).
+    """
+    fresh = {r["mode"]: r for r in json.loads(fresh_path.read_text())}
+    base = {r["mode"]: r for r in json.loads(baseline_path.read_text())}
+    checked = 0
+
+    naive, batched = fresh.get("naive"), fresh.get("batched")
+    if naive is None or batched is None:
+        failures.append("serve: fresh run must include the naive and "
+                        "batched modes")
+        return 0
+    checked += 1
+    speedup = batched["throughput_rps"] / naive["throughput_rps"]
+    flag = "ok" if speedup >= SERVE_SPEEDUP_MIN else "SPEEDUP REGRESSION"
+    print(f"{'serve: batched vs naive':56s} x{speedup:.1f} "
+          f"(need >= x{SERVE_SPEEDUP_MIN:.0f})  {flag}")
+    if speedup < SERVE_SPEEDUP_MIN:
+        failures.append(
+            f"serve: batched throughput only x{speedup:.2f} the naive "
+            f"path (gate: >= x{SERVE_SPEEDUP_MIN})")
+
+    speed = 1.0
+    if "naive" in base and base["naive"]["throughput_rps"] > 0:
+        speed = max(1.0, base["naive"]["throughput_rps"]
+                    / naive["throughput_rps"])
+        print(f"serve runner speed (naive probe): x{speed:.2f} "
+              "vs baseline machine")
+
+    for mode, rec in sorted(fresh.items()):
+        checked += 1
+        flags = []
+        if mode != "naive" and rec.get("request_traces") != 0:
+            flags.append("REQUEST-TIME TRACE")
+            failures.append(
+                f"serve {mode}: {rec.get('request_traces')} executable "
+                "trace(s) during the timed region — the service must "
+                "only ever run warm plans")
+        if rec["rel_err_max"] > SERVE_ERR_MAX:
+            flags.append("ERROR REGRESSION")
+            failures.append(
+                f"serve {mode}: rel_err_max {rec['rel_err_max']:.2e} > "
+                f"{SERVE_ERR_MAX:.0e}")
+        b = base.get(mode)
+        if b is not None and b["throughput_rps"] > 0:
+            floor = b["throughput_rps"] / (TIME_FACTOR * speed)
+            if rec["throughput_rps"] < floor:
+                flags.append("THROUGHPUT REGRESSION")
+                failures.append(
+                    f"serve {mode}: {rec['throughput_rps']:.2f} req/s < "
+                    f"floor {floor:.2f} (baseline "
+                    f"{b['throughput_rps']:.2f})")
+        print(f"{'serve: ' + mode:56s} "
+              f"{rec['throughput_rps']:8.2f} req/s  "
+              f"traces={rec.get('request_traces')}  "
+              f"{', '.join(flags) or 'ok'}")
+    return checked
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fresh", type=Path,
@@ -156,6 +241,12 @@ def main(argv=None):
                     default=BENCH_DIR / "condense_baseline.json")
     ap.add_argument("--skip-condense", action="store_true",
                     help="gate the estimator records only")
+    ap.add_argument("--serve-fresh", type=Path,
+                    default=BENCH_DIR / "serve.json")
+    ap.add_argument("--serve-baseline", type=Path,
+                    default=BENCH_DIR / "serve_baseline.json")
+    ap.add_argument("--skip-serve", action="store_true",
+                    help="skip the serving-path gate")
     args = ap.parse_args(argv)
 
     baseline = _load(args.baseline)
@@ -192,6 +283,15 @@ def main(argv=None):
         print(f"condense runner speed (ge probe): x{cspeed:.2f} "
               "vs baseline machine")
         compared += gate(cond_base, cond_fresh, cspeed, failures)
+
+    # ---- serving path (benchmarks.serve_bench) --------------------------
+    if not args.skip_serve and args.serve_baseline.exists():
+        if not args.serve_fresh.exists():
+            print(f"FAIL: {args.serve_fresh} missing — run "
+                  "benchmarks.serve_bench before the gate")
+            return 1
+        compared += gate_serve(args.serve_fresh, args.serve_baseline,
+                               failures)
 
     if compared == 0:
         print("FAIL: fresh run has none of the gated baseline records")

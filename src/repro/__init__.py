@@ -32,8 +32,20 @@ from repro.core.plan import (
 
 __all__ = [
     "plan", "LogdetPlan", "ProblemSpec", "select_method", "select_route",
-    "spec_of",
+    "spec_of", "load_plan",
     "ExactConfig", "EngineConfig", "ChebyshevConfig", "SLQConfig",
     "Calibration", "load_calibration",
     "LogdetResult", "Diagnostics",
 ]
+
+
+def load_plan(path: str, **kwargs) -> LogdetPlan:
+    """Load an AOT-exported plan artifact (see `LogdetPlan.export`).
+
+    The returned plan executes the deserialized XLA binary directly —
+    zero traces, zero compiles, bit-identical results to the exporting
+    process.  Delegates to `repro.serve.aot.load_plan` (imported lazily:
+    the serve subsystem is optional at import time).
+    """
+    from repro.serve.aot import load_plan as _load
+    return _load(path, **kwargs)

@@ -35,7 +35,8 @@ from repro.core.engine import (
 
 __all__ = [
     "ExactConfig", "ChebyshevConfig", "SLQConfig", "LogdetConfig",
-    "EngineConfig", "config_for", "EXACT_METHODS", "ESTIMATOR_METHODS",
+    "EngineConfig", "config_for", "config_to_dict", "config_from_dict",
+    "EXACT_METHODS", "ESTIMATOR_METHODS",
     "PARALLEL_METHODS", "METHODS", "LEGACY_EXACT_ROUTES",
 ]
 
@@ -274,6 +275,35 @@ def filter_for_method(method: str, kwargs: dict) -> dict:
             f"them; valid names: {sorted(known)})")
     names = {f.name for f in dataclasses.fields(config_cls_for(method))}
     return {k: v for k, v in kwargs.items() if k in names}
+
+
+def config_to_dict(config: LogdetConfig) -> dict:
+    """JSON-safe dict encoding of a typed config, tagged with its class.
+
+    Inverse of `config_from_dict`; this is the on-disk form the AOT plan
+    header (repro.serve.aot) carries, so an exported artifact records the
+    exact knobs it was compiled with.
+    """
+    if not isinstance(config, (ExactConfig, ChebyshevConfig, SLQConfig)):
+        raise TypeError(f"not a logdet config: {type(config).__name__}")
+    return {"type": type(config).__name__, **dataclasses.asdict(config)}
+
+
+def config_from_dict(d: dict) -> LogdetConfig:
+    """Rebuild a typed config from `config_to_dict` output (validating)."""
+    d = dict(d)
+    name = d.pop("type", None)
+    cls = {"ExactConfig": ExactConfig, "ChebyshevConfig": ChebyshevConfig,
+           "SLQConfig": SLQConfig}.get(name)
+    if cls is None:
+        raise ValueError(f"unknown config type {name!r}")
+    names = {f.name for f in dataclasses.fields(cls)}
+    extra = set(d) - names
+    if extra:
+        raise ValueError(
+            f"unknown fields for {name}: {sorted(extra)} — artifact from "
+            "a newer build?")
+    return cls(**d)
 
 
 def validate_config(method: str, config: LogdetConfig) -> LogdetConfig:

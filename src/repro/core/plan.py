@@ -694,6 +694,18 @@ class LogdetPlan:
         through a compiled plan holds this at 1."""
         return len(self._trace_log)
 
+    def export(self, path: str) -> str:
+        """AOT-serialize this plan's compiled forward to ``path``.
+
+        The artifact carries a device-fingerprint header and replays
+        bit-identically via `repro.load_plan` in any matching process —
+        with zero traces and zero compiles at load or request time.
+        Only compiled, non-operator plans are exportable; see
+        repro.serve.aot for the full contract.
+        """
+        from repro.serve.aot import export_plan
+        return export_plan(self, path)
+
     def explain(self) -> str:
         """Human-readable report of what this plan resolved to and what
         it has observed: route, modeled cost, trace/retrace state, and —

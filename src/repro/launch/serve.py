@@ -65,19 +65,10 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
-                    help="serve repro.obs metrics on http://127.0.0.1:PORT"
-                         "/metrics (0 picks a free port)")
-    ap.add_argument("--metrics-hold", type=float, default=0.0, metavar="S",
-                    help="keep the process alive S seconds after generation "
-                         "so the /metrics endpoint can be scraped")
+    obs.add_metrics_cli(ap)
     args = ap.parse_args(argv)
 
-    server = None
-    if args.metrics_port is not None:
-        server = obs.start_metrics_server(args.metrics_port)
-        host, port = server.server_address[:2]
-        print(f"metrics: http://{host}:{port}/metrics")
+    server = obs.start_metrics_from_args(args)
 
     cfg = get_config(args.arch, smoke=True).replace(remat=False)
     rng = np.random.default_rng(0)

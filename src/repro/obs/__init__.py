@@ -28,11 +28,13 @@ from repro.obs.config import (
     trace_enabled,
 )
 from repro.obs.export import (
-    chrome_trace, export_chrome_trace, export_jsonl, export_metrics,
-    install_atexit, start_metrics_server, validate_chrome_trace, write_all,
+    add_metrics_cli, chrome_trace, export_chrome_trace, export_jsonl,
+    export_metrics, install_atexit, start_metrics_from_args,
+    start_metrics_server, validate_chrome_trace, write_all,
 )
 from repro.obs.metrics import (
-    counter_value, inc, observe, prometheus_text, set_gauge, snapshot,
+    counter_value, inc, observe, prometheus_text, quantile, set_gauge,
+    snapshot,
 )
 from repro.obs.telemetry import (
     drain as drain_telemetry, emit_curve, emit_point, flush as flush_telemetry,
@@ -45,11 +47,12 @@ __all__ = [
     "MODES", "ENV_VAR", "ENV_DIR",
     "span", "stage", "events", "dropped_events",
     "inc", "set_gauge", "observe", "counter_value", "snapshot",
-    "prometheus_text",
+    "prometheus_text", "quantile",
     "emit_curve", "emit_point", "running_sem", "drain_telemetry",
     "flush_telemetry",
     "chrome_trace", "export_chrome_trace", "export_jsonl", "export_metrics",
     "validate_chrome_trace", "write_all", "start_metrics_server",
+    "add_metrics_cli", "start_metrics_from_args",
     "install_atexit", "reset",
 ]
 

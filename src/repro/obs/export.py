@@ -186,3 +186,31 @@ def start_metrics_server(port: int = 0, host: str = "127.0.0.1"):
                               name="repro-obs-metrics")
     thread.start()
     return server
+
+
+def add_metrics_cli(parser) -> None:
+    """Install the standard ``--metrics-port`` / ``--metrics-hold`` flags.
+
+    Shared by every serving-style entrypoint (``repro.launch.serve``,
+    ``repro.serve``) so the scrape surface is spelled the same way
+    everywhere.  Pair with `start_metrics_from_args`.
+    """
+    parser.add_argument(
+        "--metrics-port", type=int, default=None, metavar="PORT",
+        help="serve repro.obs metrics on http://127.0.0.1:PORT/metrics "
+             "(0 picks a free port)")
+    parser.add_argument(
+        "--metrics-hold", type=float, default=0.0, metavar="S",
+        help="keep the process alive S seconds after the run so the "
+             "/metrics endpoint can be scraped")
+
+
+def start_metrics_from_args(args):
+    """Start (and announce) the metrics server if ``--metrics-port`` was
+    given; returns the server or ``None``."""
+    if getattr(args, "metrics_port", None) is None:
+        return None
+    server = start_metrics_server(args.metrics_port)
+    host, port = server.server_address[:2]
+    print(f"metrics: http://{host}:{port}/metrics")
+    return server

@@ -25,6 +25,11 @@ _counters: Dict[_Key, float] = {}
 _gauges: Dict[_Key, float] = {}
 _hists: Dict[_Key, Dict[str, float]] = {}
 
+# bounded per-histogram sample reservoirs backing `quantile`; kept out of
+# the histogram summary dicts so snapshot()/prometheus output is unchanged
+_RESERVOIR = 2048
+_samples: Dict[_Key, List[float]] = {}
+
 
 def _key(name: str, labels: Dict[str, Any]) -> _Key:
     return name, tuple(sorted((k, str(v)) for k, v in labels.items()))
@@ -64,6 +69,34 @@ def observe(name: str, value: float, **labels: Any) -> None:
         h["sum"] += v
         h["min"] = min(h["min"], v)
         h["max"] = max(h["max"], v)
+        s = _samples.setdefault(k, [])
+        s.append(v)
+        if len(s) > _RESERVOIR:
+            # deterministic decimation: keep every other sample.  Coarser
+            # than true reservoir sampling but reproducible, and fine for
+            # the p50/p99 operational readouts this backs.
+            _samples[k] = s[::2]
+
+
+def quantile(name: str, q: float, **labels: Any) -> Optional[float]:
+    """Linear-interpolated quantile over a histogram's sample reservoir.
+
+    ``q`` in [0, 1].  Returns ``None`` when nothing has been observed
+    (including when metrics are disabled).  Backed by a bounded reservoir
+    (the last ~``_RESERVOIR`` observations, decimated), so treat it as an
+    operational readout, not an exact statistic.
+    """
+    if not 0.0 <= q <= 1.0:
+        raise ValueError(f"quantile must be in [0, 1], got {q}")
+    with _lock:
+        s = _samples.get(_key(name, labels))
+        if not s:
+            return None
+        s = sorted(s)
+    pos = q * (len(s) - 1)
+    lo = int(pos)
+    hi = min(lo + 1, len(s) - 1)
+    return s[lo] + (s[hi] - s[lo]) * (pos - lo)
 
 
 def counter_value(name: str, **labels: Any) -> float:
@@ -148,3 +181,4 @@ def reset() -> None:
         _counters.clear()
         _gauges.clear()
         _hists.clear()
+        _samples.clear()

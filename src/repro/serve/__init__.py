@@ -1,0 +1,40 @@
+"""repro.serve — logdet-as-a-service on top of `LogdetPlan`.
+
+Layers (each usable on its own):
+
+==============  ========================================================
+``aot``         AOT plan export/import: `export_plan` / `load_plan`
+                serialize a compiled plan's XLA executable with a
+                device-fingerprint header — the serving process never
+                traces or compiles at request time
+``bucket``      the pad-to-bucket policy (`BucketLadder`,
+                `pad_to_bucket`, `stack_to_bucket`) and the warm-plan
+                LRU (`PlanCache`)
+``batching``    request admission and coalescing of heterogeneous
+                ``(A, method, rtol)`` traffic into homogeneous stacks
+``service``     `LogdetService` — submit() -> Future[LogdetResult],
+                one continuous-batching drain thread
+``http``        stdlib JSON front end (``POST /v1/logdet`` ...)
+==============  ========================================================
+
+``python -m repro.serve`` runs the HTTP service; see docs/serving.md.
+"""
+from repro.serve.aot import (
+    PLAN_FORMAT, PlanExportError, PlanFingerprintError, device_fingerprint,
+    export_plan, load_plan, read_header,
+)
+from repro.serve.batching import BatchGroup, Request, coalesce
+from repro.serve.bucket import (
+    DEFAULT_BUCKETS, BucketLadder, PlanCache, bucket_batch, pad_to_bucket,
+    stack_to_bucket,
+)
+from repro.serve.service import LogdetService, ServeConfig, plan_filename
+
+__all__ = [
+    "PLAN_FORMAT", "PlanExportError", "PlanFingerprintError",
+    "device_fingerprint", "export_plan", "load_plan", "read_header",
+    "BatchGroup", "Request", "coalesce",
+    "DEFAULT_BUCKETS", "BucketLadder", "PlanCache", "bucket_batch",
+    "pad_to_bucket", "stack_to_bucket",
+    "LogdetService", "ServeConfig", "plan_filename",
+]
