@@ -15,8 +15,6 @@ than rank-1 MC at the same total bytes.
 """
 from __future__ import annotations
 
-import warnings
-
 from repro.core.engine import (
     EngineConfig,
     apply_panel,
@@ -42,15 +40,13 @@ def parallel_slogdet_mc_blocked(mesh, axis_name: str = "rows", *, k: int = 32,
     to its live rows; remainder rows use the rank-1 schedule and the
     P x P tail is gathered and solved redundantly (`engine.mesh_tail`).
 
-    ``lookahead`` is accepted for signature compatibility only; requesting
-    it warns — the panel schedule runs with no lookahead reorder (see
-    docs/api.md, "Known inert knobs").
+    ``lookahead=True`` pipelines the schedule LU-style: the owner of panel
+    g+1 factors it from an early-applied copy while the bulk rank-k GEMM
+    of panel g is still pending, and the ``(R, ls)`` broadcast of panel
+    g+1 is double-buffered through the loop carry so the collective
+    overlaps compute instead of serializing with it.  Results are
+    bit-identical to ``lookahead=False`` (asserted in tests/test_engine).
     """
-    if lookahead:
-        warnings.warn(
-            "lookahead is not implemented: the mesh panel schedule runs "
-            "without the LU-style lookahead reorder; the flag is accepted "
-            "for signature compatibility only", UserWarning, stacklevel=2)
     cfg = EngineConfig(schedule="mesh", update="panel", panel_k=k,
-                       backend="xla")
+                       backend="xla", lookahead=lookahead)
     return build_mesh(cfg, mesh, axis_name, gemm_fn=gemm_fn)

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import functools
 import json
+import math
 import os
 from dataclasses import dataclass
 from pathlib import Path
@@ -115,7 +116,8 @@ def clear_calibration_cache():
 
 def exact_cost(n: int, devices: int, cal: Calibration, *,
                update: str = "rank1", panel_k: int = 32,
-               itemsize: int = 8, batch: int = 1) -> float:
+               itemsize: int = 8, batch: int = 1,
+               lookahead: bool = False) -> float:
     """Modeled wall time of an exact condensation route.
 
     ``devices == 1`` prices the serial/staged schedules; ``devices > 1``
@@ -123,6 +125,12 @@ def exact_cost(n: int, devices: int, cal: Calibration, *,
     (or K-row panel) still pays one broadcast, so the communication term
     is NOT divided by P.  Batched stacks run one device per matrix (no
     collectives), so ``batch`` scales the compute term only.
+
+    ``lookahead`` prices the pipelined mesh schedule: the double-buffered
+    broadcast overlaps the bulk trailing update, hiding up to the
+    per-device compute time of the communication term, at the price of
+    an extra early-apply of each step/panel to the next pivot rows
+    (~``2 * width^2 * n`` FLOPs per step, width = panel_k or 1).
     """
     if n <= 1:
         return 0.0
@@ -140,10 +148,23 @@ def exact_cost(n: int, devices: int, cal: Calibration, *,
         if update == "panel":
             steps = max(1, n // panel_k)
             payload = itemsize * panel_k * n          # (K x N) panel + ls
+            width = panel_k
         else:
             steps = n
             payload = itemsize * n                    # one normalized row
-        cost += steps * (cal.collective_lat + payload / cal.collective_bytes)
+            width = 1
+        # tree/butterfly collectives pay the latency once per hop, and the
+        # hop count grows with the device fan-out: ~log2(P) depth
+        lat = cal.collective_lat * max(1.0, math.log2(devices))
+        comm = steps * (lat + payload / cal.collective_bytes)
+        if lookahead:
+            # the in-flight collective overlaps the bulk update: only the
+            # part of comm that exceeds per-device compute stays exposed
+            hidden = min(comm, cost)
+            overhead = steps * 2.0 * width * width * n / cal.gemm_flops
+            cost += (comm - hidden) + overhead
+        else:
+            cost += comm
     return cost
 
 

@@ -74,6 +74,11 @@ class ExactConfig:
     ``backend``  — "auto" | "xla" | "pallas" kernel backend.
     ``k``        — panel width of the rank-K update.
     ``shrink``/``min_size`` — staged-schedule geometry.
+    ``lookahead`` — mesh-only: pipeline the next pivot row / panel so its
+                   broadcast overlaps the current bulk update
+                   (bit-identical results; see `engine.EngineConfig`).
+                   Requires ``schedule`` unset (mesh resolves when a mesh
+                   is present) or explicitly ``"mesh"``.
 
     Baseline-only knob: ``nb`` — block-cyclic tile size of the
     ScaLAPACK-style LU (``plu``).  Methods that do not use a knob ignore
@@ -86,6 +91,7 @@ class ExactConfig:
     backend: str = "auto"
     shrink: float = 0.75
     min_size: int = 64
+    lookahead: bool = False
 
     def __post_init__(self):
         _require(int(self.k) >= 1, f"k must be >= 1, got {self.k}")
@@ -102,6 +108,10 @@ class ExactConfig:
                  f"shrink must be in (0, 1), got {self.shrink}")
         _require(int(self.min_size) >= 2,
                  f"min_size must be >= 2, got {self.min_size}")
+        _require(not self.lookahead or self.schedule in (None, "mesh"),
+                 "lookahead pipelines the mesh schedule's broadcast; it "
+                 f"requires schedule='mesh' (or unset), got "
+                 f"{self.schedule!r}")
 
     def resolved(self, *, mesh_present: bool = False) -> "ExactConfig":
         """Pin the engine axes (plan-time resolution of the defaults).
@@ -113,6 +123,10 @@ class ExactConfig:
         """
         from repro.core.engine import resolve_backend
         sched = self.schedule or ("mesh" if mesh_present else "staged")
+        if self.lookahead and sched != "mesh":
+            raise ValueError(
+                "lookahead requires the mesh schedule: pass a mesh (or "
+                f"schedule='mesh'); resolution chose {sched!r}")
         upd = self.update or "rank1"
         backend = resolve_backend(self.backend)
         if (sched == self.schedule and upd == self.update
@@ -127,7 +141,8 @@ class ExactConfig:
                  "engine axes unresolved; call .resolved() first")
         return EngineConfig(schedule=self.schedule, update=self.update,
                             panel_k=self.k, backend=self.backend,
-                            shrink=self.shrink, min_size=self.min_size)
+                            shrink=self.shrink, min_size=self.min_size,
+                            lookahead=self.lookahead)
 
 
 @dataclass(frozen=True)

@@ -83,6 +83,12 @@ class EngineConfig:
     ``panel_k``   panel width of the rank-K update (ignored for rank1).
     ``shrink``    geometric stage ratio of the staged schedule.
     ``min_size``  size at which the staged schedule stops re-jitting.
+    ``lookahead`` mesh-only: pipeline the next pivot row / panel — its
+                  owner factors it from an early-applied copy *before*
+                  the bulk trailing update of the current one, so the
+                  broadcast collective is double-buffered and overlaps
+                  compute instead of serializing with it.  Bit-identical
+                  results (asserted in tests/test_engine.py).
     Frozen + hashable so it can ride inside `ExactConfig` and key the
     plan cache.
     """
@@ -92,6 +98,7 @@ class EngineConfig:
     backend: str = "auto"
     shrink: float = 0.75
     min_size: int = 64
+    lookahead: bool = False
 
     def __post_init__(self):
         if self.schedule not in SCHEDULES:
@@ -109,6 +116,10 @@ class EngineConfig:
             raise ValueError(f"shrink must be in (0, 1), got {self.shrink}")
         if int(self.min_size) < 2:
             raise ValueError(f"min_size must be >= 2, got {self.min_size}")
+        if self.lookahead and self.schedule != "mesh":
+            raise ValueError(
+                "lookahead pipelines the mesh schedule's broadcast; it "
+                f"requires schedule='mesh', got {self.schedule!r}")
 
 
 # legacy route string -> (schedule, update); the historical spellings all
@@ -714,9 +725,12 @@ def mesh_tail(local, sign, logdet, axis_name: str):
     L, N = local.shape
     P = _axis_size(axis_name)
     with obs.stage("engine.mesh_tail"):
+        # slice the live columns (the [0, P) prefix) BEFORE the gather:
+        # the collective moves 8*P^2 bytes, not 8*N*P — gathering full
+        # rows only to discard N - P columns inflated tail traffic N/P x
         live = lax.dynamic_slice(local, (L - 1, 0), (1, N))[0, :]
-        tail = lax.all_gather(live, axis_name)      # (P, N): device-ordered
-        tail = lax.slice(tail, (0, 0), (P, P))      # live cols are prefix
+        live = lax.slice(live, (0,), (P,))          # live cols are prefix
+        tail = lax.all_gather(live, axis_name)      # (P, P): device-ordered
         tsign, tlogdet = condense_full(tail)        # redundant on all devs
 
         logdet_total = lax.psum(logdet, axis_name) + tlogdet
@@ -806,6 +820,271 @@ def _mesh_panel_kernel(axis_name: str, k: int, *, gemm_fn=None,
 
 
 # --------------------------------------------------------------------------
+# lookahead mesh kernels (double-buffered broadcast, LU-style pipelining)
+# --------------------------------------------------------------------------
+#
+# The plain mesh kernels serialize per step: factor -> broadcast -> bulk
+# update, so every collective sits on the critical path between the
+# owner's factorization and everyone's trailing update.  The lookahead
+# kernels restructure the loop so the broadcast of step/panel g+1 is
+# *issued before* the bulk update of step/panel g and only *consumed on
+# the next iteration* — double buffering.  With no data dependency
+# between the in-flight collective and the trailing update, XLA's
+# latency-hiding scheduler overlaps them; per panel the exposed
+# (non-overlapped) collective count drops from one to zero at steady
+# state.
+#
+# The price is an early apply: before the owner of g+1 can factor its
+# rows, those rows need step/panel g applied.  The early apply runs on a
+# sliced COPY (k x N for panels, 1 x N for rank-1) with exactly the
+# per-row arithmetic of the bulk update, so the pivots it selects — and
+# therefore (sign, logabsdet) — are bit-identical to the non-lookahead
+# schedule (asserted across schedule x update x P in tests).  `local`
+# itself is only ever advanced by the same bulk updates as before.
+
+
+def _mesh_rank1_lookahead_kernel(axis_name: str, update_fn=None):
+    """Rank-1 mesh kernel with single-row lookahead.
+
+    Carry holds the already-broadcast ``(pr, l)`` of the current step;
+    each iteration early-applies the current step to the *next* pivot
+    row, factors/normalizes it, issues its broadcast, and only then runs
+    the bulk rank-1 update of the current step.
+    """
+
+    def select_pivot(row, m, dtype):
+        """Pivot choice + §2.3/§2.4 row normalization (owner-local)."""
+        N = row.shape[0]
+        last = m - 1
+        absrow = jnp.where(jnp.arange(N) < m, jnp.abs(row), -jnp.inf)
+        l = jnp.argmax(absrow)
+        pv = row[l]
+        rlast = row[last]
+        row = row.at[l].set(rlast).at[last].set(pv)
+        safe = guarded_pivot(pv, dtype)
+        pr = jnp.where(pv == 0, jnp.zeros_like(row), row / safe)
+        pr = pr.at[last].set(jnp.where(pv == 0, pr[last], 1.0))
+        return pr, l, pv
+
+    def kernel(local):
+        L, N = local.shape
+        P = _axis_size(axis_name)
+        me = lax.axis_index(axis_name)
+        dt = local.dtype
+        zero = local[0, 0] * 0                # device-varying scalar zero
+        n_steps = (L - 1) * P
+        if n_steps == 0:
+            return mesh_tail(local, zero + 1, zero, axis_name)
+
+        def bcast(pr, l, mine):
+            return lax.psum(
+                (jnp.where(mine, pr, jnp.zeros_like(pr)),
+                 jnp.where(mine, l, jnp.zeros_like(l))),
+                axis_name,
+            )
+
+        def contribution(pv, l, m, i, p, sign, logdet, mine):
+            r_pos = p * (L - 1 - i)
+            parity = jnp.where((r_pos + m - 1) % 2 == 0, 1.0, -1.0).astype(dt)
+            swap_sign = jnp.where(l == m - 1, 1.0, -1.0).astype(dt)
+            step_sign = jnp.sign(pv) * swap_sign * parity
+            sign = jnp.where(mine, sign * step_sign, sign)
+            logdet = logdet + jnp.where(mine, jnp.log(jnp.abs(pv)), zero)
+            return sign, logdet
+
+        # prologue: step 0's pivot row, broadcast in flight before the loop
+        pr0, l0, pv0 = select_pivot(local[0], N, dt)
+        sign, logdet = contribution(pv0, l0, N, 0, 0, zero + 1, zero, me == 0)
+        pr_b, l_b = bcast(pr0, l0, me == 0)
+
+        def body(t, carry):
+            local, pr_b, l_b, sign, logdet = carry
+            m = N - t
+            last = m - 1
+
+            # ---- lookahead: early-apply step t to the NEXT pivot row,
+            # factor it, and issue its broadcast before the bulk update
+            with obs.stage("engine.lookahead_factor"):
+                t1 = t + 1
+                i1 = t1 // P
+                p1 = t1 % P
+                mine1 = me == p1
+                row = local[i1]
+                rl, rlast = row[l_b], row[last]
+                row = row.at[l_b].set(rlast).at[last].set(rl)
+                pc_i = row[last]
+                if update_fn is None:
+                    row = (row[None, :]
+                           - jnp.outer(pc_i[None], pr_b))[0]
+                else:
+                    row = update_fn(row[None, :], pc_i[None], pr_b)[0]
+                pr1, l1, pv1 = select_pivot(row, m - 1, dt)
+            with obs.stage("engine.broadcast"):
+                pr_nb, l_nb = bcast(pr1, l1, mine1)
+
+            # ---- bulk: the plain step-t swap + rank-1 update ------------
+            with obs.stage("engine.swap"):
+                cl = jnp.take(local, l_b, axis=1)
+                clast = jnp.take(local, last, axis=1)
+                local = local.at[:, l_b].set(clast)
+                local = local.at[:, last].set(cl)
+            with obs.stage("engine.update"):
+                i = t // P
+                p = t % P
+                pc = jnp.take(local, last, axis=1)
+                dead = i + (me <= p)
+                pc = jnp.where(jnp.arange(L) < dead, 0.0, pc)
+                if update_fn is None:
+                    local = local - jnp.outer(pc, pr_b)
+                else:
+                    local = update_fn(local, pc, pr_b)
+
+            sign, logdet = contribution(pv1, l1, m - 1, i1, p1,
+                                        sign, logdet, mine1)
+            return local, pr_nb, l_nb, sign, logdet
+
+        carry = (local, pr_b, l_b, sign, logdet)
+        if n_steps > 1:
+            carry = lax.fori_loop(0, n_steps - 1, body, carry)
+        local, pr_b, l_b, sign, logdet = carry
+
+        # epilogue: bulk update of the final step (its broadcast is the
+        # one left in the carry; no further lookahead to issue)
+        t_last = n_steps - 1
+        m = N - t_last
+        last = m - 1
+        cl = jnp.take(local, l_b, axis=1)
+        clast = jnp.take(local, last, axis=1)
+        local = local.at[:, l_b].set(clast)
+        local = local.at[:, last].set(cl)
+        pc = jnp.take(local, last, axis=1)
+        dead = t_last // P + (me <= t_last % P)
+        pc = jnp.where(jnp.arange(L) < dead, 0.0, pc)
+        if update_fn is None:
+            local = local - jnp.outer(pc, pr_b)
+        else:
+            local = update_fn(local, pc, pr_b)
+
+        return mesh_tail(local, sign, logdet, axis_name)
+
+    return kernel
+
+
+def _mesh_panel_lookahead_kernel(axis_name: str, k: int, *, gemm_fn=None,
+                                 update_fn=None, factor_fn=None):
+    """Round-robin K-panel mesh kernel with LU-style lookahead.
+
+    The owner of panel g+1 factors it from an early-applied (K x N) copy
+    while every device still has the bulk rank-K GEMM of panel g ahead of
+    it in program order; the ``(R, ls)`` broadcast of panel g+1 is issued
+    between the two, double-buffered through the loop carry, so the
+    collective overlaps the trailing GEMM instead of serializing with
+    it.  Remainder rows and the P x P tail are shared with the plain
+    kernel (bit-identical by construction).
+    """
+
+    if factor_fn is None:
+        factor_fn = panel_factor_dispatch(False)
+
+    def kernel(local):
+        L, N = local.shape
+        P = _axis_size(axis_name)
+        me = lax.axis_index(axis_name)
+        n_rounds = (L - 1) // k
+        n_panels = n_rounds * P
+        lrow = jnp.arange(L)
+        zero = local[0, 0] * 0
+        ones_k = jnp.ones((k,), local.dtype)
+
+        def factor_at(local, g):
+            """Factor global panel g from MY rows (valid on the owner)."""
+            r = g // P
+            p = g % P
+            panel = lax.dynamic_slice(local, (r * k, 0), (k, N))
+            r_pos = p * (L - (r + 1) * k)
+            return factor_fn(panel, N - g * k, r_pos=r_pos,
+                             update_fn=update_fn)
+
+        def bcast(R, ls, mine):
+            return lax.psum(
+                (jnp.where(mine, R, jnp.zeros_like(R)),
+                 jnp.where(mine, ls, jnp.zeros_like(ls))),
+                axis_name,
+            )
+
+        def bulk_apply(local, R_b, ls_b, g):
+            r = g // P
+            p = g % P
+            dead = jnp.where(me <= p, (r + 1) * k, r * k)
+            row_mask = (lrow >= dead).astype(local.dtype)
+            return apply_panel(local, R_b, ls_b, N - g * k, row_mask,
+                               gemm_fn=gemm_fn)
+
+        sign, logdet = zero + 1, zero
+        if n_panels > 0:
+            # prologue: factor + broadcast panel 0 (no trailing GEMM to
+            # hide it behind yet)
+            R0, ls0, psign0, plogdet0 = factor_at(local, 0)
+            mine0 = me == 0
+            sign = jnp.where(mine0, sign * psign0, sign)
+            logdet = logdet + jnp.where(mine0, plogdet0, zero)
+            R_b, ls_b = bcast(R0, ls0, mine0)
+
+            def panel_step(g, carry):
+                """Bulk-apply panel g; lookahead-factor + broadcast g+1."""
+                local, R_b, ls_b, sign, logdet = carry
+                g1 = g + 1
+                r1 = g1 // P
+                p1 = g1 % P
+                mine1 = me == p1
+
+                # ---- lookahead: early-apply panel g to MY candidate
+                # rows for panel g+1 (a sliced copy — `local` is only
+                # ever advanced by the bulk applies), then factor
+                with obs.stage("engine.lookahead_factor"):
+                    nxt = lax.dynamic_slice(local, (r1 * k, 0), (k, N))
+                    nxt = apply_panel(nxt, R_b, ls_b, N - g * k, ones_k,
+                                      gemm_fn=gemm_fn)
+                    r_pos1 = p1 * (L - (r1 + 1) * k)
+                    R1, ls1, psign1, plogdet1 = factor_fn(
+                        nxt, N - g1 * k, r_pos=r_pos1, update_fn=update_fn)
+                # issue the double-buffered broadcast of panel g+1 — no
+                # data dependency with the bulk GEMM below, so the
+                # collective can overlap it
+                with obs.stage("engine.broadcast"):
+                    R_nb, ls_nb = bcast(R1, ls1, mine1)
+
+                # ---- bulk rank-K GEMM of panel g on the live rows -------
+                local = bulk_apply(local, R_b, ls_b, g)
+
+                sign = jnp.where(mine1, sign * psign1, sign)
+                logdet = logdet + jnp.where(mine1, plogdet1, zero)
+                return local, R_nb, ls_nb, sign, logdet
+
+            carry = (local, R_b, ls_b, sign, logdet)
+            if n_panels > 1:
+                carry = lax.fori_loop(0, n_panels - 1, panel_step, carry)
+            local, R_b, ls_b, sign, logdet = carry
+            # epilogue: the last panel's bulk GEMM
+            local = bulk_apply(local, R_b, ls_b, n_panels - 1)
+
+        # remainder rows: rank-1 schedule continuing at t = n_rounds*k per
+        # device — shared with the plain kernel, bit-identical
+        rem = (L - 1) - n_rounds * k
+        if rem > 0:
+            step = mc_step_fn(axis_name, update_fn=update_fn)
+            t_start = n_rounds * k * P
+            local, rsign, rlogdet = lax.fori_loop(
+                t_start, t_start + rem * P, step, (local, zero + 1, zero))
+            sign = sign * rsign
+            logdet = logdet + rlogdet
+
+        return mesh_tail(local, sign, logdet, axis_name)
+
+    return kernel
+
+
+# --------------------------------------------------------------------------
 # engine builders — the single entry points every route resolves to
 # --------------------------------------------------------------------------
 
@@ -847,7 +1126,16 @@ def build_mesh(cfg: EngineConfig, mesh, axis_name: str = "rows", *,
             factor_fn = panel_factor_dispatch(resolve_backend(cfg.backend))
 
     if cfg.update == "rank1":
-        kernel = _mesh_rank1_kernel(axis_name, update_fn=update_fn)
+        if cfg.lookahead:
+            kernel = _mesh_rank1_lookahead_kernel(axis_name,
+                                                  update_fn=update_fn)
+        else:
+            kernel = _mesh_rank1_kernel(axis_name, update_fn=update_fn)
+    elif cfg.lookahead:
+        kernel = _mesh_panel_lookahead_kernel(axis_name, cfg.panel_k,
+                                              gemm_fn=gemm_fn,
+                                              update_fn=update_fn,
+                                              factor_fn=factor_fn)
     else:
         kernel = _mesh_panel_kernel(axis_name, cfg.panel_k,
                                     gemm_fn=gemm_fn, update_fn=update_fn,

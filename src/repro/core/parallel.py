@@ -30,13 +30,17 @@ from repro.core.engine import (
 __all__ = ["parallel_slogdet_mc", "mc_step_fn", "mc_local_phase"]
 
 
-def parallel_slogdet_mc(mesh, axis_name: str = "rows", *, update_fn=None):
+def parallel_slogdet_mc(mesh, axis_name: str = "rows", *, update_fn=None,
+                        lookahead: bool = False):
     """Parallel Matrix Condensation logdet over a 1-D device mesh.
 
     Engine route ``(schedule="mesh", update="rank1")``.  Returns a function
     ``f(a) -> (sign, logabsdet)`` for an ``(N, N)`` matrix with ``N``
     divisible by the mesh size.  ``update_fn`` overrides the rank-1 update
-    hook (kernel injection for benchmarks/tests).
+    hook (kernel injection for benchmarks/tests).  ``lookahead=True``
+    pipelines the next pivot row's factorization and broadcast past the
+    current bulk update (bit-identical results, overlapped collective).
     """
-    cfg = EngineConfig(schedule="mesh", update="rank1", backend="xla")
+    cfg = EngineConfig(schedule="mesh", update="rank1", backend="xla",
+                       lookahead=lookahead)
     return build_mesh(cfg, mesh, axis_name, update_fn=update_fn)

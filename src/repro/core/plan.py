@@ -254,24 +254,33 @@ def _best_exact_route(spec: ProblemSpec, devices: int, cal: Calibration,
     n, b = spec.n, spec.batch or 1
     if spec.batch is not None:
         # stacks run one matrix per device (vmapped serial schedule)
-        candidates = [("serial", "rank1", 1), ("serial", "panel", 1)]
+        candidates = [("serial", "rank1", 1, False),
+                      ("serial", "panel", 1, False)]
     else:
-        candidates = [("staged", "rank1", 1), ("staged", "panel", 1)]
+        candidates = [("staged", "rank1", 1, False),
+                      ("staged", "panel", 1, False)]
         if devices > 1:
-            candidates += [("mesh", "rank1", devices),
-                           ("mesh", "panel", devices)]
+            # each mesh route is offered plain and pipelined — lookahead
+            # hides broadcast latency behind the bulk update, so the
+            # serial<->mesh crossover moves left when its overhead term
+            # is smaller than the hidden communication
+            candidates += [("mesh", "rank1", devices, False),
+                           ("mesh", "panel", devices, False),
+                           ("mesh", "rank1", devices, True),
+                           ("mesh", "panel", devices, True)]
     if n < _PANEL_MIN_N_FACTOR * _DEFAULT_PANEL_K:
         candidates = [c for c in candidates if c[1] != "panel"]
-    best = min(
-        candidates,
-        key=lambda c: exact_cost(n, c[2], cal, update=c[1],
-                                 panel_k=_DEFAULT_PANEL_K,
-                                 itemsize=itemsize, batch=b))
-    schedule, update, devs = best
-    cost = exact_cost(n, devs, cal, update=update,
-                      panel_k=_DEFAULT_PANEL_K, itemsize=itemsize, batch=b)
+
+    def cost_of(c):
+        schedule, update, devs, la = c
+        return exact_cost(n, devs, cal, update=update,
+                          panel_k=_DEFAULT_PANEL_K, itemsize=itemsize,
+                          batch=b, lookahead=la)
+
+    best = min(candidates, key=cost_of)
+    schedule, update, devs, la = best
     return EngineConfig(schedule=schedule, update=update,
-                        panel_k=_DEFAULT_PANEL_K), cost
+                        panel_k=_DEFAULT_PANEL_K, lookahead=la), cost_of(best)
 
 
 def _flops_est(method: str, spec: ProblemSpec, cfg: LogdetConfig,
@@ -901,6 +910,8 @@ def plan(x, *, method: str = "auto", mesh=None, axis_name: str = "rows",
             # the selector's engine tuple, user-supplied axes winning
             kwargs.setdefault("schedule", route.schedule)
             kwargs.setdefault("update", route.update)
+            if route.schedule == "mesh":
+                kwargs.setdefault("lookahead", route.lookahead)
     elif method in LEGACY_EXACT_ROUTES:
         schedule, update = LEGACY_ROUTES[method]
         warnings.warn(

@@ -28,7 +28,9 @@ from repro.serve.bucket import (
     DEFAULT_BUCKETS, BucketLadder, PlanCache, bucket_batch, pad_to_bucket,
     stack_to_bucket,
 )
-from repro.serve.service import LogdetService, ServeConfig, plan_filename
+from repro.serve.service import (
+    LogdetService, ServeConfig, ServiceClosed, plan_filename,
+)
 
 __all__ = [
     "PLAN_FORMAT", "PlanExportError", "PlanFingerprintError",
@@ -36,5 +38,5 @@ __all__ = [
     "BatchGroup", "Request", "coalesce",
     "DEFAULT_BUCKETS", "BucketLadder", "PlanCache", "bucket_batch",
     "pad_to_bucket", "stack_to_bucket",
-    "LogdetService", "ServeConfig", "plan_filename",
+    "LogdetService", "ServeConfig", "ServiceClosed", "plan_filename",
 ]

@@ -44,7 +44,16 @@ from repro.serve.bucket import (
     DEFAULT_BUCKETS, BucketLadder, PlanCache, bucket_batch, stack_to_bucket,
 )
 
-__all__ = ["ServeConfig", "LogdetService", "plan_filename"]
+__all__ = ["ServeConfig", "LogdetService", "ServiceClosed", "plan_filename"]
+
+
+class ServiceClosed(RuntimeError):
+    """The service is closed.
+
+    Raised by `LogdetService.submit` after `close()`, and set on the
+    futures of requests that were still queued when the drain thread
+    stopped — a queued request must fail loudly, never hang its client.
+    """
 
 
 @dataclass(frozen=True)
@@ -118,7 +127,7 @@ class LogdetService:
         non-square, non-finite, or larger than the top bucket rung.
         """
         if self._closed:
-            raise RuntimeError("service is closed")
+            raise ServiceClosed("service is closed")
         m = method or self.config.default_method
         if m != "auto" and m not in METHODS:
             raise ValueError(f"unknown method {m!r}; one of {METHODS} "
@@ -129,7 +138,7 @@ class LogdetService:
         obs.observe("serve.request_n", req.n)
         with self._cond:
             if self._closed:
-                raise RuntimeError("service is closed")
+                raise ServiceClosed("service is closed")
             self._ensure_thread()
             self._pending.append(req)
             self._cond.notify()
@@ -231,25 +240,48 @@ class LogdetService:
 
     def _drain_loop(self):
         wait_s = self.config.max_wait_ms / 1e3
-        while True:
-            with self._cond:
-                while not self._pending and not self._closed:
-                    self._cond.wait()
-                if wait_s > 0 and not self._closed \
-                        and len(self._pending) < self.config.max_batch:
-                    deadline = time.perf_counter() + wait_s
-                    while (len(self._pending) < self.config.max_batch
-                           and not self._closed):
-                        rem = deadline - time.perf_counter()
-                        if rem <= 0:
-                            break
-                        self._cond.wait(rem)
-                batch, self._pending = self._pending, []
-                done = self._closed and not batch
-            if done:
-                return
-            for group in coalesce(batch, self.config.max_batch):
-                self._run_group(group)
+        batch: list = []
+        try:
+            while True:
+                with self._cond:
+                    while not self._pending and not self._closed:
+                        self._cond.wait()
+                    if wait_s > 0 and not self._closed \
+                            and len(self._pending) < self.config.max_batch:
+                        deadline = time.perf_counter() + wait_s
+                        while (len(self._pending) < self.config.max_batch
+                               and not self._closed):
+                            rem = deadline - time.perf_counter()
+                            if rem <= 0:
+                                break
+                            self._cond.wait(rem)
+                    popped, self._pending = self._pending, []
+                    done = self._closed and not popped
+                if done:
+                    # keep `batch` pointing at the last popped work so the
+                    # exit cleanup below can still fail anything _run_group
+                    # left unresolved (e.g. it was wedged past close())
+                    return
+                batch = popped
+                for group in coalesce(batch, self.config.max_batch):
+                    self._run_group(group)
+        finally:
+            # the drain is stopping — normally (close) or by a crash
+            # outside _run_group's guard (e.g. coalesce).  Whatever is
+            # still queued, or popped but unprocessed, must fail loudly
+            # instead of leaving forever-pending futures.
+            self._fail_queued(batch)
+
+    def _fail_queued(self, extra: Sequence = ()) -> None:
+        """Fail every queued (and ``extra``) request with `ServiceClosed`."""
+        with self._cond:
+            leftovers, self._pending = self._pending, []
+        exc = ServiceClosed(
+            "service closed before this request was served")
+        for r in list(extra) + leftovers:
+            if not r.future.done():
+                obs.inc("serve.responses", status="closed")
+                r.future.set_exception(exc)
 
     def _run_group(self, g: BatchGroup) -> None:
         try:
@@ -274,6 +306,8 @@ class LogdetService:
             for i, r in enumerate(g.requests):
                 diags = dataclasses.replace(
                     res.diagnostics, padded_n=g.bucket)
+                if r.future.done():      # already failed by close()
+                    continue
                 r.future.set_result(LogdetResult(
                     sign=signs[i], logabsdet=lds[i], sem=sems[i],
                     method_used=res.method_used, diagnostics=diags))
@@ -294,13 +328,21 @@ class LogdetService:
     # ------------------------------------------------------------ lifecycle
 
     def close(self, timeout: Optional[float] = 30.0) -> None:
-        """Drain remaining requests, then stop the drain thread."""
+        """Drain remaining requests, then stop the drain thread.
+
+        Requests still queued when the drain stops — it crashed earlier,
+        or ``timeout`` expired with it wedged — get `ServiceClosed` set
+        on their futures; `submit` raises `ServiceClosed` from now on.
+        """
         with self._cond:
             self._closed = True
             self._cond.notify_all()
         if self._thread is not None:
             self._thread.join(timeout)
             self._thread = None
+        # normally the drain already failed its own leftovers on exit;
+        # this covers a wedged or previously-crashed thread
+        self._fail_queued()
 
     def __enter__(self):
         return self

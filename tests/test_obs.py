@@ -387,18 +387,20 @@ def test_explain_reports_execution_and_obs_state():
     assert "RETRACED" not in txt
 
 
-# ------------------------------------------------------------- inert knobs
-def test_lookahead_warns(mesh1):
+# ------------------------------------------------------------- former inert knobs
+def test_lookahead_no_longer_warns(mesh1):
+    """lookahead is implemented now: requesting it must be silent, the
+    default path stays silent, and unknown kwargs are a TypeError (no
+    silent-acceptance signature-compat surface left)."""
     from repro.core.blocked import parallel_slogdet_mc_blocked
-
-    with pytest.warns(UserWarning, match="lookahead is not implemented"):
-        parallel_slogdet_mc_blocked(mesh1, lookahead=True)
-    # default path stays silent
     import warnings
 
     with warnings.catch_warnings():
         warnings.simplefilter("error")
+        parallel_slogdet_mc_blocked(mesh1, lookahead=True)
         parallel_slogdet_mc_blocked(mesh1)
+    with pytest.raises(TypeError):
+        parallel_slogdet_mc_blocked(mesh1, lookahed=True)  # typo'd knob
 
 
 # ------------------------------------------------------------- environment

@@ -19,8 +19,8 @@ import jax
 import repro
 from repro import obs
 from repro.serve import (
-    BucketLadder, LogdetService, PlanCache, ServeConfig, bucket_batch,
-    coalesce, pad_to_bucket, stack_to_bucket,
+    BucketLadder, LogdetService, PlanCache, ServeConfig, ServiceClosed,
+    bucket_batch, coalesce, pad_to_bucket, stack_to_bucket,
 )
 from repro.serve.aot import (
     PlanExportError, PlanFingerprintError, read_header,
@@ -352,6 +352,48 @@ def test_service_drain_failure_fails_futures(rng, monkeypatch):
         svc.close()
     with pytest.raises(RuntimeError, match="closed"):
         svc.submit(np.eye(4))
+
+
+def test_service_close_fails_queued_requests(rng, monkeypatch):
+    # Regression: a request still queued when the drain thread stops used
+    # to be left with a forever-pending future, hanging any client blocked
+    # in .result().  close() must fail it with ServiceClosed promptly.
+    cfg = ServeConfig(buckets=(8,), max_batch=1, max_wait_ms=0.0)
+    svc = LogdetService(cfg)
+    entered, release = threading.Event(), threading.Event()
+
+    def wedge(group):
+        entered.set()
+        release.wait(60)
+
+    monkeypatch.setattr(svc, "_run_group", wedge)
+    try:
+        first = svc.submit(np.eye(4))
+        assert entered.wait(30)          # drain popped `first` and wedged
+        queued = svc.submit(np.eye(4))   # stays queued behind the wedge
+
+        got = {}
+
+        def client():
+            try:
+                got["res"] = queued.result(timeout=60)
+            except Exception as exc:     # noqa: BLE001 — recorded for assert
+                got["exc"] = exc
+
+        t = threading.Thread(target=client)
+        t.start()
+        svc.close(timeout=0.2)           # wedged drain: join times out
+        t.join(30)
+        assert not t.is_alive(), "client is still blocked on a dead request"
+        assert isinstance(got.get("exc"), ServiceClosed)
+        with pytest.raises(ServiceClosed, match="closed"):
+            svc.submit(np.eye(4))
+    finally:
+        release.set()                    # unwedge so the thread can exit
+    # once the drain resumes and exits, the popped-but-unprocessed request
+    # is failed too (drain-exit cleanup), not leaked
+    with pytest.raises(ServiceClosed):
+        first.result(timeout=30)
 
 
 def test_service_submit_rejections(rng):
