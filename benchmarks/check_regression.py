@@ -49,6 +49,14 @@ ratio at P >= 4 (``--strict`` requires >= 1.0 on real-interconnect
 runners), and absolute wall time vs ``scaling_baseline.json`` with the
 plain records as the runner-speed probe.
 
+The static-audit records from ``python -m repro.analysis --all --json``
+are gated by `gate_audit` (``--audit``, a standalone mode like
+``--scaling``): any error-severity finding fails outright, any finding
+ident absent from the committed ``bench_out/audit_baseline.json`` fails
+(new waivers must be re-baselined deliberately, not silently absorbed),
+and a checker pass present in the baseline but missing from the fresh
+run fails (a dropped pass would otherwise pass vacuously).
+
 Refresh the baselines after a legitimate perf/accuracy change:
 
     PYTHONPATH=src python -m benchmarks.estimators_bench \
@@ -60,6 +68,8 @@ Refresh the baselines after a legitimate perf/accuracy change:
     cp bench_out/serve.json bench_out/serve_baseline.json
     PYTHONPATH=src:. python -m benchmarks.fig7_8 --measured
     cp bench_out/scaling.json bench_out/scaling_baseline.json
+    PYTHONPATH=src python -m repro.analysis --all \
+        --json bench_out/audit_baseline.json
 """
 from __future__ import annotations
 
@@ -326,6 +336,56 @@ def gate_scaling(fresh_path: Path, baseline_path: Path, failures: list,
     return checked
 
 
+def gate_audit(fresh_path: Path, baseline_path: Path,
+               failures: list) -> int:
+    """Gate the static-audit findings (python -m repro.analysis --json).
+
+    Both files are `repro.analysis.AuditReport` JSON; findings carry a
+    line-number-stable ``ident`` (pass::context::file), so the diff
+    below survives unrelated edits.  Three checks: (1) no fresh finding
+    may be error-severity — errors never belong in a baseline; (2) every
+    fresh ident must already exist in the baseline — a NEW finding, even
+    an allowlist-waived one, fails until the baseline is refreshed
+    deliberately; (3) every checker pass recorded in the baseline must
+    have run fresh — a silently dropped pass would pass vacuously.
+    """
+    fresh = json.loads(fresh_path.read_text())
+    base = json.loads(baseline_path.read_text())
+    base_idents = {f["ident"] for f in base.get("findings", [])}
+    checked = 0
+
+    for f in fresh.get("findings", []):
+        checked += 1
+        flags = []
+        if f["severity"] == "error":
+            flags.append("AUDIT ERROR")
+            failures.append(
+                f"audit {f['ident']}: [{f['pass_id']}] {f['message']}")
+        elif f["ident"] not in base_idents:
+            flags.append("NEW FINDING")
+            failures.append(
+                f"audit {f['ident']}: finding not in the committed "
+                "baseline — fix it, or re-baseline deliberately "
+                "(check_regression docstring, 'Refresh the baselines')")
+        print(f"{f['ident']:72s} [{f['severity']}"
+              f"{'/waived' if f.get('waived') else ''}]  "
+              f"{', '.join(flags) or 'ok'}")
+
+    fresh_idents = {f["ident"] for f in fresh.get("findings", [])}
+    for ident in sorted(base_idents - fresh_idents):
+        print(f"note: baseline audit finding {ident} resolved in fresh "
+              "run — refresh the baseline to lock the improvement in")
+
+    fresh_passes = set(fresh.get("passes_run", []))
+    for p in sorted(set(base.get("passes_run", [])) - fresh_passes):
+        checked += 1
+        failures.append(
+            f"audit: pass {p!r} ran in the baseline but not fresh — a "
+            "dropped pass gates nothing")
+    checked += 1     # the error-free / coverage sweep itself
+    return checked
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fresh", type=Path,
@@ -357,7 +417,37 @@ def main(argv=None):
                          "P >= 4 (real-interconnect runners; CI's "
                          "single-core fake devices use the overhead "
                          "thresholds)")
+    ap.add_argument("--audit", action="store_true",
+                    help="gate ONLY the static-audit findings "
+                         "(python -m repro.analysis --all --json) against "
+                         "the committed audit baseline")
+    ap.add_argument("--audit-fresh", type=Path,
+                    default=BENCH_DIR / "audit.json")
+    ap.add_argument("--audit-baseline", type=Path,
+                    default=BENCH_DIR / "audit_baseline.json")
     args = ap.parse_args(argv)
+
+    if args.audit:
+        if not args.audit_fresh.exists():
+            print(f"FAIL: {args.audit_fresh} missing — run "
+                  "python -m repro.analysis --all --json "
+                  f"{args.audit_fresh} before the gate")
+            return 1
+        if not args.audit_baseline.exists():
+            print(f"FAIL: {args.audit_baseline} missing — commit a "
+                  "baseline (check_regression docstring, 'Refresh the "
+                  "baselines')")
+            return 1
+        failures = []
+        checked = gate_audit(args.audit_fresh, args.audit_baseline,
+                             failures)
+        if failures:
+            print(f"\nFAIL: {len(failures)} audit regression(s):")
+            for f in failures:
+                print(" -", f)
+            return 1
+        print(f"\nOK: {checked} audit checks within gates")
+        return 0
 
     if args.scaling:
         if not args.scaling_fresh.exists():

@@ -1,0 +1,51 @@
+"""repro.analysis — static IR/AST audits that prove plan invariants
+before execution.
+
+Layers (each usable on its own):
+
+  `repro.analysis.ir`      StableHLO/HLO text -> normalized instruction
+                           table (opcode, shapes, dtypes, named-scope
+                           ancestry, collective payload bytes)
+  `repro.analysis.passes`  registered checker passes over parsed modules
+                           (`run_passes`, `PASSES`, `AuditContext`)
+  `repro.analysis.lint`    AST lint rules over repo source
+  `repro.analysis.audit`   drivers: lower a `LogdetPlan` / plan grid /
+                           AOT artifact dir and run the passes
+  `repro.analysis.report`  `Finding` / `AuditReport` / allowlist
+
+Entry points: ``plan.audit()``, ``python -m repro.analysis --all``, and
+the export screen inside `repro.serve.aot`.  See docs/analysis.md.
+"""
+from repro.analysis.ir import (
+    CollectiveStats, Instruction, Module, Shape, collective_bytes,
+    parse_module, roofline,
+)
+from repro.analysis.passes import (
+    AuditContext, DEFAULT_PASS_IDS, PASSES, SAFE_CUSTOM_CALLS,
+    expected_engine_stages, register_pass, run_passes,
+)
+from repro.analysis.report import (
+    AuditReport, Finding, apply_allowlist, load_allowlist,
+)
+from repro.analysis.lint import LINT_RULES, lint_paths, lint_source
+from repro.analysis.audit import (
+    PlanAuditError, audit_aot_dir, audit_artifact, audit_grid, audit_plan,
+    default_grid,
+)
+
+__all__ = [
+    "Shape", "Instruction", "Module", "parse_module", "collective_bytes",
+    "CollectiveStats", "roofline",
+    "AuditContext", "PASSES", "DEFAULT_PASS_IDS", "SAFE_CUSTOM_CALLS",
+    "register_pass", "run_passes", "expected_engine_stages",
+    "Finding", "AuditReport", "load_allowlist", "apply_allowlist",
+    "LINT_RULES", "lint_source", "lint_paths",
+    "PlanAuditError", "audit_plan", "audit_grid", "default_grid",
+    "audit_artifact", "audit_aot_dir", "DEFAULT_ALLOWLIST",
+]
+
+from pathlib import Path as _Path
+
+# the committed waiver file next to this package; CLI and gates use it
+# unless --allowlist points elsewhere
+DEFAULT_ALLOWLIST = _Path(__file__).with_name("allowlist.toml")

@@ -1,0 +1,323 @@
+"""Audit drivers: lower a plan (or a whole plan grid, or an AOT artifact
+dir) and run the registered IR passes over the result.
+
+The split of lowering work mirrors what each pass can see:
+
+  * lowered StableHLO (``.lower().as_text()``) is cheap and keeps every
+    op visible pre-fusion — custom calls, collectives, converts live
+    here, so most passes run on it;
+  * compiled HLO (``.compile().as_text()``) carries the named-scope
+    ancestry (``obs.stage`` -> ``metadata op_name``) that
+    ``stage-coverage`` needs, at the price of an XLA compile — the
+    drivers only pay it when a ``wants="hlo"`` pass is selected and the
+    plan is an exact-engine route.
+
+`audit_plan` is the core; `LogdetPlan.audit()` delegates here.  The CLI
+(`python -m repro.analysis`) wraps `audit_grid` / `audit_aot_dir` /
+`repro.analysis.lint.lint_paths`.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.analysis.passes import (
+    PASSES, AuditContext, DEFAULT_PASS_IDS, run_passes,
+)
+from repro.analysis.report import AuditReport, Finding
+
+__all__ = ["PlanAuditError", "audit_plan", "audit_grid", "default_grid",
+           "audit_artifact", "audit_aot_dir", "context_for",
+           "backward_label"]
+
+
+class PlanAuditError(ValueError):
+    """The plan has no statically-analyzable lowering."""
+
+
+# --------------------------------------------------------------------------
+# plan -> AuditContext
+# --------------------------------------------------------------------------
+
+def context_for(plan, kind: str = "forward") -> AuditContext:
+    """Derive the pass inputs from a live `LogdetPlan`."""
+    import jax.numpy as jnp
+    from repro.core.configs import ESTIMATOR_METHODS, ExactConfig
+    from repro import obs
+
+    spec, cfg = plan.spec, plan.config
+    schedule = update = None
+    lookahead, panel_k = False, 32
+    if isinstance(cfg, ExactConfig):
+        ecfg = cfg.engine_config()
+        schedule, update = ecfg.schedule, ecfg.update
+        lookahead, panel_k = ecfg.lookahead, ecfg.panel_k
+    n = plan.diagnostics.padded_n or spec.n
+    label = plan.method if schedule is None else \
+        f"{plan.method}:{schedule}/{update}" + ("/la" if lookahead else "")
+    if kind != "forward":
+        label = f"{label} {kind}"
+    return AuditContext(
+        label=label, method=plan.method, kind=kind,
+        schedule=schedule, update=update, lookahead=lookahead,
+        panel_k=panel_k, n=n,
+        devices=plan.diagnostics.device_count or 1,
+        itemsize=jnp.dtype(spec.dtype).itemsize, dtype=spec.dtype,
+        obs_mode=obs.mode(),
+        matrix_free=plan.method in ESTIMATOR_METHODS)
+
+
+def backward_label(plan) -> str:
+    return context_for(plan, kind="backward").label
+
+
+# --------------------------------------------------------------------------
+# plan -> lowerings
+# --------------------------------------------------------------------------
+
+def _avals(plan):
+    import jax
+    import jax.numpy as jnp
+    spec = plan.spec
+    dtype = jnp.dtype(spec.dtype)
+    shape = ((spec.n, spec.n) if spec.batch is None
+             else (spec.batch, spec.n, spec.n))
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _forward_lowered(plan):
+    """A fresh ``jax.Lowered`` of the plan's forward at its avals.
+
+    Mirrors serve/aot.export_plan: lower a rebuilt forward with a scratch
+    trace log so auditing never marks a retrace on the live plan."""
+    import jax
+    from repro.core.configs import ESTIMATOR_METHODS
+    from repro.core.plan import _build_forward, _is_mesh_exact, \
+        _parallel_kernel
+
+    spec, method, cfg = plan.spec, plan.method, plan.config
+    if spec.kind == "operator":
+        raise PlanAuditError(
+            "operator plans compose the operator's own executables and "
+            "have no single lowering to audit; audit a dense plan of the "
+            "materialized matrix instead")
+
+    if _is_mesh_exact(method, cfg):
+        import jax.numpy as jnp
+        pn = plan.diagnostics.padded_n or spec.n
+        aval = jax.ShapeDtypeStruct((pn, pn), jnp.dtype(spec.dtype))
+        kernel = _parallel_kernel(method, cfg, plan.mesh, plan.axis_name)
+        return kernel.lower(aval)
+
+    if not plan.compiled:
+        raise PlanAuditError(
+            f"plan (method={plan.method!r}, mesh={plan.mesh is not None}) "
+            "composes eager executables at run time and has no single "
+            "lowering to audit")
+
+    a_aval = _avals(plan)
+    dtype = a_aval.dtype
+    fwd, _, _ = _build_forward(spec, method, cfg, None, plan.axis_name,
+                               dtype, trace_log=[])
+    if method in ESTIMATOR_METHODS:
+        k0 = np.asarray(jax.random.PRNGKey(getattr(cfg, "seed", 0)))
+        k_aval = jax.ShapeDtypeStruct(k0.shape, k0.dtype)
+        return jax.jit(lambda a, key: fwd(a, key=key)).lower(a_aval, k_aval)
+    return jax.jit(lambda a: fwd(a)).lower(a_aval)
+
+
+def _backward_lowered(plan):
+    """Lower the plan's gradient: d logabsdet / d A at the plan avals."""
+    import jax
+    a_aval = _avals(plan)
+
+    def loss(a):
+        return plan.slogdet(a)[1]
+
+    return jax.jit(jax.grad(loss)).lower(a_aval)
+
+
+def _needs_hlo(plan, pass_ids: Sequence[str]) -> bool:
+    """Compile (to recover named scopes) only when it can matter."""
+    wants_hlo = any(PASSES[p].wants == "hlo" for p in pass_ids)
+    return wants_hlo and plan.method == "exact"
+
+
+# --------------------------------------------------------------------------
+# core driver
+# --------------------------------------------------------------------------
+
+def audit_plan(plan, pass_ids: Optional[Sequence[str]] = None,
+               include_grad: bool = False) -> AuditReport:
+    """Statically audit a `LogdetPlan` -> `AuditReport`.
+
+    Lowers a fresh forward (and, with ``include_grad``, the backward) at
+    the plan's avals and runs the selected passes (default:
+    `DEFAULT_PASS_IDS`).  Raises `PlanAuditError` for plans with no
+    static lowering (operator inputs, sharded-estimator composites).
+    """
+    ids = tuple(pass_ids) if pass_ids is not None else DEFAULT_PASS_IDS
+    report = AuditReport()
+    lowerings: List[Tuple[str, object]] = [("forward", _forward_lowered(plan))]
+    if include_grad:
+        lowerings.append(("backward", _backward_lowered(plan)))
+
+    for kind, lowered in lowerings:
+        ctx = context_for(plan, kind=kind)
+        any_ids = tuple(p for p in ids if PASSES[p].wants != "hlo")
+        hlo_ids = tuple(p for p in ids if PASSES[p].wants == "hlo")
+        if any_ids:
+            report.extend(run_passes(lowered.as_text(), ctx, any_ids))
+        if hlo_ids and kind == "forward" and _needs_hlo(plan, hlo_ids):
+            report.extend(run_passes(lowered.compile().as_text(), ctx,
+                                     hlo_ids))
+        elif hlo_ids:
+            # keep passes_run honest: selected but structurally inapplicable
+            for p in hlo_ids:
+                if p not in report.passes_run:
+                    report.passes_run.append(p)
+    report.meta.setdefault("plans", []).append(context_for(plan).label)
+    return report
+
+
+# --------------------------------------------------------------------------
+# grid driver (the CLI's --grid / --all)
+# --------------------------------------------------------------------------
+
+def default_grid(n: int = 32, panel_k: int = 8) -> List[dict]:
+    """The audit matrix from the CI contract: every engine route
+    (serial|staged|mesh x rank1|panel x lookahead on/off) plus the
+    estimator methods with their backward passes."""
+    entries = []
+    for schedule in ("serial", "staged", "mesh"):
+        for update in ("rank1", "panel"):
+            for la in ((False, True) if schedule == "mesh" else (False,)):
+                entries.append(dict(method="exact", schedule=schedule,
+                                    update=update, lookahead=la, n=n,
+                                    k=panel_k))
+    for method in ("chebyshev", "slq"):
+        entries.append(dict(method=method, n=n, grad=True,
+                            num_probes=4, seed=0))
+    return entries
+
+
+def _grid_mesh():
+    import jax
+    from jax.sharding import Mesh
+    return Mesh(np.array(jax.devices()), ("rows",))
+
+
+def audit_grid(entries: Optional[List[dict]] = None,
+               pass_ids: Optional[Sequence[str]] = None,
+               n: int = 32) -> AuditReport:
+    """Plan and audit every grid entry; one merged `AuditReport`."""
+    from repro.core.plan import plan as make_plan
+
+    entries = entries if entries is not None else default_grid(n=n)
+    mesh = None
+    report = AuditReport()
+    for entry in entries:
+        entry = dict(entry)
+        grad = entry.pop("grad", False)
+        size = entry.pop("n", n)
+        method = entry.pop("method")
+        if entry.get("schedule") == "mesh" and mesh is None:
+            mesh = _grid_mesh()
+        kw = {}
+        if entry.get("schedule") == "mesh":
+            kw["mesh"] = mesh
+        if method in ("chebyshev",):
+            entry.setdefault("degree", 8)
+        if method in ("slq",):
+            entry.setdefault("num_steps", 8)
+        p = make_plan((size, size), method=method, **kw, **entry)
+        report.extend(audit_plan(p, pass_ids=pass_ids, include_grad=grad))
+    return report
+
+
+# --------------------------------------------------------------------------
+# AOT artifact audit (the CLI's --aot)
+# --------------------------------------------------------------------------
+
+def audit_artifact(path, pass_ids: Optional[Sequence[str]] = None
+                   ) -> AuditReport:
+    """Audit one exported plan artifact.
+
+    The artifact stores a compiled XLA executable; its disassembly is
+    post-fusion HLO, so scope-sensitive passes apply but per-op converts
+    may already be fused away.  A device-fingerprint mismatch is reported
+    as a finding (the executable cannot be safely deserialized here), not
+    an exception — an audit sweep over a mixed artifact dir should keep
+    going."""
+    import jax.numpy as jnp
+    from repro.core.configs import ESTIMATOR_METHODS
+    from repro.serve.aot import (
+        PlanFingerprintError, check_fingerprint, read_header,
+    )
+    from jax.experimental.serialize_executable import deserialize_and_load
+    import pickle
+
+    path = str(path)
+    header = read_header(path)
+    spec = header["spec"]
+    method = header["method"]
+    ecfg = header.get("config", {})
+    label = f"aot:{method}:n{spec['n']}"
+    ctx = AuditContext(
+        label=label, method=method, kind="export",
+        schedule=ecfg.get("schedule"), update=ecfg.get("update"),
+        lookahead=bool(ecfg.get("lookahead")),
+        panel_k=int(ecfg.get("k") or 32),
+        n=int(header.get("padded_n") or spec["n"]),
+        itemsize=jnp.dtype(spec["dtype"]).itemsize, dtype=spec["dtype"],
+        obs_mode="off",     # exported programs must be telemetry-free
+        matrix_free=method in ESTIMATOR_METHODS)
+
+    report = AuditReport(contexts=[label])
+    try:
+        check_fingerprint(header, path)
+    except PlanFingerprintError as exc:
+        report.findings.append(Finding(
+            pass_id="aot-fingerprint", severity="warning", context=label,
+            message=str(exc), where=path))
+        return report
+
+    from repro.serve.aot import _read
+    _, blob = _read(path)
+    payload, in_tree, out_tree = pickle.loads(blob)
+    executable = deserialize_and_load(payload, in_tree, out_tree)
+    text = executable.as_text()
+
+    ids = tuple(pass_ids) if pass_ids is not None else \
+        DEFAULT_PASS_IDS + ("exportable-custom-calls",)
+    # post-fusion text: stage-coverage would mis-read fused scopes of
+    # estimator programs; only structural-presence passes apply
+    ids = tuple(p for p in ids if p != "stage-coverage")
+    report.extend(run_passes(text, ctx, ids))
+    return report
+
+
+def audit_aot_dir(dirpath, pass_ids: Optional[Sequence[str]] = None
+                  ) -> AuditReport:
+    """Audit every ``*.reproplan`` (or any magic-tagged file) in a dir."""
+    from pathlib import Path
+    from repro.serve.aot import _MAGIC
+
+    report = AuditReport()
+    found = 0
+    for f in sorted(Path(dirpath).iterdir()):
+        if not f.is_file():
+            continue
+        with open(f, "rb") as fh:
+            if fh.read(len(_MAGIC)) != _MAGIC:
+                continue
+        found += 1
+        report.extend(audit_artifact(f, pass_ids=pass_ids))
+    report.meta["artifacts"] = found
+    if not found:
+        report.findings.append(Finding(
+            pass_id="aot-scan", severity="warning", context="aot",
+            message=f"no plan artifacts found under {dirpath}",
+            where=str(dirpath)))
+    return report

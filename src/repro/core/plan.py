@@ -703,6 +703,19 @@ class LogdetPlan:
         through a compiled plan holds this at 1."""
         return len(self._trace_log)
 
+    def audit(self, passes=None, include_grad: bool = False):
+        """Statically audit this plan's lowering -> `AuditReport`.
+
+        Lowers a fresh forward (and, with ``include_grad``, the backward)
+        at the plan's avals and runs the registered IR checker passes:
+        no dense factorizations on matrix-free paths, no host callbacks
+        with observability off, collective payloads within their analytic
+        bounds, dtype discipline, and stage coverage.  Never executes or
+        re-traces the live plan.  See docs/analysis.md.
+        """
+        from repro.analysis.audit import audit_plan
+        return audit_plan(self, pass_ids=passes, include_grad=include_grad)
+
     def export(self, path: str) -> str:
         """AOT-serialize this plan's compiled forward to ``path``.
 

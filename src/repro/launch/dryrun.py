@@ -104,7 +104,7 @@ def lower_cell(arch: str, shape_name: str, mesh, *, smoke: bool = False,
     elif shape.kind == "prefill":
         scfg = _serving_cfg(cfg)
         params_shapes = jax.eval_shape(lambda k: M.init_model(k, scfg), key)
-        pshard = param_shardings(params_shapes, scfg, mesh, kind="serve")
+        pshard = param_shardings(params_shapes, scfg, mesh)
         cspec = M.cache_specs(scfg, shape.global_batch, shape.seq_len)
         cshard = jax.tree.map(lambda s: NamedSharding(mesh, s),
                               cache_shardings(cspec, scfg, mesh),
@@ -121,7 +121,7 @@ def lower_cell(arch: str, shape_name: str, mesh, *, smoke: bool = False,
     elif shape.kind == "decode":
         scfg = _serving_cfg(cfg)
         params_shapes = jax.eval_shape(lambda k: M.init_model(k, scfg), key)
-        pshard = param_shardings(params_shapes, scfg, mesh, kind="serve")
+        pshard = param_shardings(params_shapes, scfg, mesh)
         cspec = M.cache_specs(scfg, shape.global_batch, shape.seq_len)
         cshard = jax.tree.map(lambda s: NamedSharding(mesh, s),
                               cache_shardings(cspec, scfg, mesh),

@@ -1,133 +1,17 @@
-"""HLO-level analysis: collective-bytes extraction + roofline terms.
+"""Compatibility shim — the HLO parser moved to `repro.analysis.ir`.
 
-``cost_analysis()`` gives FLOPs and HBM bytes but NOT collective traffic;
-we parse the post-SPMD (per-device) HLO text and sum the payloads of every
-all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
-
-Wire-byte conventions (ring algorithms, per device):
-  all-reduce         2 x operand bytes   (reduce-scatter + all-gather phases)
-  all-gather         output bytes - operand bytes (received shards)
-  reduce-scatter     operand bytes - output bytes
-  all-to-all         operand bytes       (each device re-sends its shard)
-  collective-permute operand bytes
-
-Roofline terms (TPU v5e defaults):
-  compute    = HLO_FLOPs            / (chips * 197e12 FLOP/s)
-  memory     = HLO_bytes            / (chips * 819e9  B/s)
-  collective = wire_bytes_per_chip  /          49.5e9 B/s  (per ICI link)
+This module used to hold the post-SPMD HLO text parser (collective wire
+bytes + roofline terms).  That parser was promoted into the
+`repro.analysis` subsystem, normalized into a full instruction table
+(opcode, shapes, dtypes, named-scope ancestry), and grew the checker
+passes described in docs/analysis.md.  The public surface re-exported
+here is unchanged; new code should import from `repro.analysis` (or
+`repro.analysis.ir`) directly.
 """
 from __future__ import annotations
 
-import re
-from dataclasses import dataclass, field
-from typing import Dict, List
+from repro.analysis.ir import (  # noqa: F401
+    HW, CollectiveStats, collective_bytes, roofline,
+)
 
 __all__ = ["collective_bytes", "roofline", "HW", "CollectiveStats"]
-
-# TPU v5e hardware constants (per chip)
-HW = {
-    "peak_flops_bf16": 197e12,     # FLOP/s
-    "hbm_bw": 819e9,               # B/s
-    "ici_bw": 49.5e9,              # B/s per link direction (~50 GB/s)
-}
-
-_DTYPE_BYTES = {
-    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
-    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
-    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
-    "c64": 8, "c128": 16, "token": 0,
-}
-
-_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
-# instruction definition:  [%]name = <shape or (tuple)> opcode(...operands)
-_DEF_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
-    r"((?:\([^)]*\))|(?:[a-z0-9]+\[[\d,]*\]\S*))\s+"
-    r"([\w\-]+)")
-_OPERAND_RE = re.compile(r"%?([\w.\-]+)")
-_COLLECTIVE_BASE = ("all-gather", "all-reduce", "reduce-scatter",
-                    "all-to-all", "collective-permute")
-
-
-def _shape_bytes(text: str) -> int:
-    total = 0
-    for dt, dims in _SHAPE_RE.findall(text):
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
-
-
-@dataclass
-class CollectiveStats:
-    counts: Dict[str, int] = field(default_factory=dict)
-    wire_bytes: float = 0.0          # per device
-    by_op: Dict[str, float] = field(default_factory=dict)
-
-
-def collective_bytes(hlo_text: str) -> CollectiveStats:
-    """Parse per-device wire bytes from (post-SPMD) HLO text.
-
-    Two passes: (1) symbol table name -> result bytes (operands are printed
-    by NAME in optimized HLO dumps), (2) per collective instruction, resolve
-    operand bytes through the table.
-
-    NOTE on while loops: collectives inside a while body are counted once
-    (same undercount as cost_analysis); the dry-run lowers with unrolled
-    layer stacks so per-step traffic is exact for the roofline table.
-    """
-    sizes: Dict[str, int] = {}
-    instrs = []
-    for line in hlo_text.splitlines():
-        m = _DEF_RE.match(line)
-        if not m:
-            continue
-        name, out_txt, op = m.group(1), m.group(2), m.group(3).lower()
-        sizes[name] = _shape_bytes(out_txt)
-        base = op
-        for suffix in ("-start", "-done"):
-            if base.endswith(suffix):
-                base = base[: -len(suffix)]
-        if base in _COLLECTIVE_BASE and not op.endswith("-done"):
-            paren = line.find("(", m.end())
-            operand_txt = line[paren + 1:line.find(")", paren)] if paren >= 0 else ""
-            instrs.append((base, name, out_txt, operand_txt))
-
-    stats = CollectiveStats()
-    for base, name, out_txt, operand_txt in instrs:
-        out_bytes = _shape_bytes(out_txt)
-        in_bytes = _shape_bytes(operand_txt)
-        if in_bytes == 0:              # operands printed by name: look up
-            in_bytes = sum(sizes.get(o, 0)
-                           for o in _OPERAND_RE.findall(operand_txt))
-        if base == "all-reduce":
-            wire = 2 * in_bytes
-        elif base == "all-gather":
-            wire = max(out_bytes - in_bytes, out_bytes // 2)
-        elif base == "reduce-scatter":
-            wire = max(in_bytes - out_bytes, in_bytes // 2)
-        else:                          # all-to-all, collective-permute
-            wire = max(in_bytes, out_bytes)
-        stats.counts[base] = stats.counts.get(base, 0) + 1
-        stats.by_op[base] = stats.by_op.get(base, 0.0) + wire
-        stats.wire_bytes += wire
-    return stats
-
-
-def roofline(*, flops: float, hbm_bytes: float, wire_bytes_per_chip: float,
-             chips: int, hw: Dict[str, float] = HW) -> Dict[str, float]:
-    """Three-term roofline (seconds) + bottleneck."""
-    terms = {
-        "compute_s": flops / (chips * hw["peak_flops_bf16"]),
-        "memory_s": hbm_bytes / (chips * hw["hbm_bw"]),
-        "collective_s": wire_bytes_per_chip / hw["ici_bw"],
-    }
-    terms["bottleneck"] = max(
-        ("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k])
-    terms["step_s_lower_bound"] = max(
-        terms["compute_s"], terms["memory_s"], terms["collective_s"])
-    return terms

@@ -27,7 +27,7 @@ from repro.models.common import (
 NEG_INF = -2.0 ** 30  # large-but-finite: keeps padded rows NaN-free
 
 
-def attn_init(key, cfg: ModelConfig, *, cross: bool = False):
+def attn_init(key, cfg: ModelConfig):
     kg = keygen(key)
     d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
     p = {
@@ -207,7 +207,8 @@ def attn_apply(p, x, cfg: ModelConfig, *, mode: str = "train",
         s = ck.shape[1]
         k_pos = jnp.arange(s)
         # mask out unwritten slots
-        q_pos = jnp.full((t,), cache_pos) if positions is None else positions
+        q_pos = jnp.full((t,), cache_pos, dtype=k_pos.dtype) \
+            if positions is None else positions
 
     kf = _repeat_kv(k, cfg.n_heads)
     vf = _repeat_kv(v, cfg.n_heads)

@@ -97,7 +97,7 @@ def cross_block_init(key, cfg: ModelConfig):
     d = cfg.d_model
     return {
         "xattn_norm": param(next(kg), (d,), ("embed",), cfg.param_dtype),
-        "xattn": attn_init(next(kg), cfg, cross=True),
+        "xattn": attn_init(next(kg), cfg),
         "xattn_gate": param(None, (1,), ("null",), cfg.param_dtype),
         "mlp_norm": param(next(kg), (d,), ("embed",), cfg.param_dtype),
         "mlp": mlp_init(next(kg), cfg),
@@ -143,7 +143,7 @@ def xdec_block_init(key, cfg: ModelConfig):
         "attn_norm": param(next(kg), (d,), ("embed",), cfg.param_dtype),
         "attn": attn_init(next(kg), cfg),
         "xattn_norm": param(next(kg), (d,), ("embed",), cfg.param_dtype),
-        "xattn": attn_init(next(kg), cfg, cross=True),
+        "xattn": attn_init(next(kg), cfg),
         "mlp_norm": param(next(kg), (d,), ("embed",), cfg.param_dtype),
         "mlp": mlp_init(next(kg), cfg),
     }

@@ -452,7 +452,7 @@ def decode_step(params, tokens, caches, pos, cfg: ModelConfig, batch_extras=None
     memory = None
     if batch_extras is not None:
         memory = _memory_for(params, batch_extras, cfg)
-    positions = jnp.full((1,), pos)
+    positions = jnp.full((1,), pos, dtype=jnp.asarray(pos).dtype)
     x, new_caches, _ = _run_stack(params, x, cfg, mode="decode", caches=caches,
                                   cache_pos=pos, positions=positions,
                                   memory=memory)

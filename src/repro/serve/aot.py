@@ -23,9 +23,11 @@ What can be exported: any plan with ``plan.compiled`` — the serial/staged
 exact engine routes (single or batched) and the single-device dense
 estimators.  Mesh-schedule and operator plans compose eagerly over cached
 inner executables and raise `PlanExportError`.  Exported programs are
-additionally screened for XLA custom-call targets (LAPACK handles do not
-survive process boundaries on CPU); the repro engine and estimators lower
-to pure XLA ops, so this screen only trips on foreign code.
+additionally screened through the `repro.analysis` pass framework
+(``exportable-custom-calls`` + ``no-host-callback``): LAPACK handles and
+host callbacks do not survive process boundaries; the repro engine and
+estimators lower to pure XLA ops, so this screen only trips on foreign
+code or telemetry left enabled.
 
 AOT-loaded plans are execute-only: they cannot be traced into an outer
 ``jit``/``grad`` (the executable is a binary, not a jaxpr) and
@@ -58,13 +60,6 @@ __all__ = [
 PLAN_FORMAT = 1
 _MAGIC = b"REPROPLAN\x00"
 
-# custom-call targets that are safe to ship across processes (layout /
-# sharding markers XLA resolves internally).  Anything else — LAPACK
-# handles in particular — is a host-function pointer that does NOT
-# survive a process boundary and would segfault at call time.
-_SAFE_CUSTOM_CALLS = frozenset({"Sharding", "SPMDFullToShardShape",
-                                "SPMDShardToFullShape"})
-
 class PlanExportError(ValueError):
     """The plan cannot be exported as an AOT artifact."""
 
@@ -85,18 +80,25 @@ def device_fingerprint() -> Dict[str, Any]:
     }
 
 
-def _screen_custom_calls(lowered) -> None:
-    """Refuse programs whose executables cannot cross a process boundary."""
-    targets = set()
-    for line in lowered.as_text().splitlines():
-        if "call_target_name" in line:
-            targets.add(line.split('call_target_name = "')[1].split('"')[0])
-    bad = sorted(targets - _SAFE_CUSTOM_CALLS)
-    if bad:
-        raise PlanExportError(
-            f"plan lowers to XLA custom calls {bad} (host function "
-            "handles that do not survive serialization across processes); "
-            "only pure-XLA programs are AOT-exportable")
+def _screen_export(lowered, plan) -> None:
+    """Refuse programs whose executables cannot cross a process boundary.
+
+    Runs the shared `repro.analysis` pass framework over the lowering
+    with ``kind="export"``: custom-call targets outside
+    `repro.analysis.passes.SAFE_CUSTOM_CALLS` (LAPACK handles are host
+    function pointers that do not survive serialization) and leaked host
+    callbacks both block the export.
+    """
+    from repro.analysis.audit import context_for
+    from repro.analysis.passes import run_passes
+
+    ctx = dataclasses.replace(context_for(plan, kind="export"),
+                              obs_mode="off")
+    report = run_passes(lowered.as_text(), ctx,
+                        ("exportable-custom-calls", "no-host-callback"))
+    if not report.ok:
+        raise PlanExportError("; ".join(
+            f.message for f in report.errors))
 
 
 def export_plan(plan, path: str) -> str:
@@ -144,7 +146,7 @@ def export_plan(plan, path: str) -> str:
                 .lower(a_aval, k_aval)
         else:
             lowered = jax.jit(lambda a: fwd(a)).lower(a_aval)
-        _screen_custom_calls(lowered)
+        _screen_export(lowered, plan)
         payload, in_tree, out_tree = serialize(lowered.compile())
 
     header = {

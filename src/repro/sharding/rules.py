@@ -100,9 +100,14 @@ def _divisible(n: int, by: int) -> bool:
     return by > 0 and n % by == 0
 
 
-def make_rules(cfg: ModelConfig, mesh: Mesh, *, fsdp: bool = True,
-               kind: str = "train") -> Dict[str, Optional[object]]:
-    """logical axis -> mesh axis (or None), adapted to cfg divisibility."""
+def make_rules(cfg: ModelConfig, mesh: Mesh, *,
+               fsdp: bool = True) -> Dict[str, Optional[object]]:
+    """logical axis -> mesh axis (or None), adapted to cfg divisibility.
+
+    Deliberately serve/train-agnostic: FSDP stays on for serving too (the
+    weights cannot be held model-sharded-only at scale), so there is no
+    ``kind`` knob here — `batch_spec` is where train/serve/decode differ.
+    """
     model_ax = "model" if "model" in mesh.axis_names else None
     data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     msize = mesh.shape.get("model", 1)

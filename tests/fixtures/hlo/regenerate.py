@@ -1,0 +1,58 @@
+"""Regenerate the committed HLO parser fixtures.
+
+Run from the repo root (single-device CPU is fine — the mesh kernels
+lower with their collectives even at P=1):
+
+    PYTHONPATH=src python tests/fixtures/hlo/regenerate.py
+
+Each fixture is a raw lowering plus a ``.golden.tsv`` — the normalized
+instruction table `repro.analysis.ir.Module.dump()` produces from it.
+tests/test_analysis.py asserts parse(fixture).dump() == golden, so a
+parser change that silently re-reads shapes/opcodes/scopes shows up as a
+golden diff, reviewable in the PR.
+
+Regenerate ONLY when the engine lowering or the dump format genuinely
+changes; jax version bumps reprint text and will churn these files.
+"""
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from jax.sharding import Mesh  # noqa: E402
+
+from repro.analysis.ir import parse_module  # noqa: E402
+from repro.core.engine import EngineConfig, build_mesh, build_serial  # noqa: E402
+
+HERE = pathlib.Path(__file__).parent
+N, K = 16, 4
+
+
+def emit(name: str, text: str) -> None:
+    (HERE / f"{name}.txt").write_text(text)
+    (HERE / f"{name}.golden.tsv").write_text(parse_module(text).dump())
+    print(f"{name}: {len(text)} chars, "
+          f"{len(parse_module(text).instructions)} instructions")
+
+
+def main() -> None:
+    a = jnp.eye(N)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("rows",))
+
+    serial = jax.jit(build_serial(EngineConfig(schedule="serial",
+                                               update="rank1")))
+    emit("serial_rank1_stablehlo", serial.lower(a).as_text())
+
+    mesh_fn = build_mesh(EngineConfig(schedule="mesh", update="rank1"), mesh)
+    emit("mesh_rank1_stablehlo", mesh_fn.lower(a).as_text())
+
+    la_fn = build_mesh(EngineConfig(schedule="mesh", update="panel",
+                                    panel_k=K, lookahead=True), mesh)
+    emit("mesh_panel_lookahead_hlo", la_fn.lower(a).compile().as_text())
+
+
+if __name__ == "__main__":
+    main()

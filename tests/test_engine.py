@@ -203,16 +203,31 @@ def test_lookahead_requires_mesh_schedule():
 def test_lookahead_stage_only_when_enabled(update, mesh1):
     """The obs.stage("engine.lookahead_factor") named scope must reach the
     compiled HLO exactly when the flag is set — the structural half of
-    the 'lookahead is real now' claim.  n=32 with panel_k=8 gives the
-    panel kernel more than one full panel, so the pipelined loop body
-    (where the stage lives) actually traces."""
+    the 'lookahead is real now' claim, certified by the `stage-coverage`
+    analysis pass in BOTH directions: the flag-on program carries the
+    stage, and auditing it under a flag-off claim fails (and vice versa —
+    each program is the other's mutation proof).  n=32 with panel_k=8
+    gives the panel kernel more than one full panel, so the pipelined
+    loop body (where the stage lives) actually traces."""
+    from repro.analysis import AuditContext, run_passes
+
     a = jnp.eye(32)
     cfgs = [EngineConfig(schedule="mesh", update=update, panel_k=8,
                          lookahead=la) for la in (False, True)]
     plain, la = (build_mesh(c, mesh1).lower(a).compile().as_text()
                  for c in cfgs)
-    assert "lookahead_factor" not in plain
-    assert "lookahead_factor" in la
+    ctxs = [AuditContext(label=f"mesh|{update}|la={flag}", method="exact",
+                         schedule="mesh", update=update, panel_k=8,
+                         lookahead=flag, n=32, devices=1)
+            for flag in (False, True)]
+    pid = ("stage-coverage",)
+    assert run_passes(plain, ctxs[0], pid).ok
+    assert run_passes(la, ctxs[1], pid).ok
+    # cross-audits: an inert flag or a phantom stage must be findings
+    assert any(f.where == "engine.lookahead_factor"
+               for f in run_passes(la, ctxs[0], pid).errors)
+    assert any(f.where == "engine.lookahead_factor"
+               for f in run_passes(plain, ctxs[1], pid).errors)
 
 
 def test_lookahead_wrappers_accept_and_thread_the_flag(mesh1):
@@ -239,18 +254,23 @@ def test_lookahead_wrappers_accept_and_thread_the_flag(mesh1):
 
 def test_mesh_tail_gathers_only_live_columns(mesh1):
     """The tail all_gather must move the (P,) live-column prefix, never
-    full (N,) rows — 8*P^2 bytes on the wire, not 8*N*P."""
-    import re
+    full (N,) rows — 8*P^2 bytes on the wire, not 8*N*P.  Certified by
+    the `collective-payload-budget` analysis pass, whose analytic bound
+    encodes exactly this; the pass's own mutation proof (an artificially
+    re-widened gather) lives in tests/test_analysis.py."""
+    from repro.analysis import AuditContext, parse_module, run_passes
+
     n = 32
     fn = build_mesh(EngineConfig(schedule="mesh", update="rank1"), mesh1)
     txt = fn.lower(jnp.eye(n)).as_text()
-    widths = [
-        shape for m in re.finditer(
-            r"all_gather.*?->\s*tensor<([^>]*)>", txt)
-        for shape in [m.group(1)]
-    ]
-    assert widths, "tail all_gather missing from the lowered mesh kernel"
-    assert not any(f"x{n}xf64" in w for w in widths), widths
+    mod = parse_module(txt)
+    gathers = [i for i in mod.collectives()
+               if i.opcode.startswith("all-gather")]
+    assert gathers, "tail all_gather missing from the lowered mesh kernel"
+    report = run_passes(mod, AuditContext(
+        label="mesh|rank1 fwd", method="exact", schedule="mesh",
+        update="rank1", n=n, devices=1), ("collective-payload-budget",))
+    assert report.ok, report.summary()
 
 
 @pytest.mark.slow

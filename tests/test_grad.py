@@ -423,22 +423,36 @@ def test_grad_under_jit_no_recompile(method, kw):
     ("slq", dict(num_probes=8, num_steps=10)),
 ])
 def test_estimator_backward_has_no_dense_solve(method, kw):
-    """Acceptance: the estimator backward pass is matrix-free — the lowered
-    grad HLO contains no LU/Cholesky/triangular-solve custom calls."""
+    """Acceptance: the estimator backward pass is matrix-free — the
+    `no-dense-factorization` analysis pass finds no LU/Cholesky/
+    triangular-solve in the lowered grad program."""
+    from repro.analysis import AuditContext, run_passes
+
     a = jnp.asarray(make_spd(16, 0))
-    hlo = jax.jit(jax.grad(lambda x: slogdet(
-        x, method=method, **kw)[1])).lower(a).as_text().lower()
-    for marker in ("getrf", "getrs", "potrf", "trsm", "triangular_solve"):
-        assert marker not in hlo, f"dense solve marker {marker!r} in bwd HLO"
+    txt = jax.jit(jax.grad(lambda x: slogdet(
+        x, method=method, **kw)[1])).lower(a).as_text()
+    report = run_passes(
+        txt, AuditContext(label=f"{method} bwd", method=method,
+                          kind="backward", matrix_free=True),
+        ("no-dense-factorization",))
+    assert report.ok, report.summary()
 
 
 def test_exact_backward_does_use_factorization():
-    """Contrast case: the exact path's backward inverse is allowed (and
-    expected) to factorize."""
+    """Contrast case — and the pass's mutation proof: the exact path's
+    backward inverse factorizes, so auditing it under a (false)
+    matrix-free claim must produce findings.  A pass that stayed silent
+    here would prove nothing above."""
+    from repro.analysis import AuditContext, run_passes
+
     a = jnp.asarray(make_spd(16, 0))
-    hlo = jax.jit(jax.grad(lambda x: slogdet(
-        x, method="mc")[1])).lower(a).as_text().lower()
-    assert any(m in hlo for m in ("getrf", "triangular_solve", "trsm"))
+    txt = jax.jit(jax.grad(lambda x: slogdet(
+        x, method="mc")[1])).lower(a).as_text()
+    report = run_passes(
+        txt, AuditContext(label="exact bwd", method="exact",
+                          kind="backward", matrix_free=True),
+        ("no-dense-factorization",))
+    assert not report.ok, "exact backward unexpectedly factorization-free"
 
 
 # --------------------------------------------------- rmm / transposed solve

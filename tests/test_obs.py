@@ -272,6 +272,9 @@ def test_cg_residual_stream():
 
 # ------------------------------------------------- off-mode overhead (HLO)
 def test_hlo_has_no_callbacks_when_off():
+    """The `no-host-callback` analysis pass certifies obs-off programs
+    are structurally callback-free (the shared form of the old grep)."""
+    from repro.analysis import AuditContext, run_passes
     from repro.estimators.chebyshev import logdet_chebyshev
 
     a = _spd(41, seed=5)
@@ -280,10 +283,16 @@ def test_hlo_has_no_callbacks_when_off():
         return logdet_chebyshev(x, degree=8, num_probes=4)[0]
 
     txt = jax.jit(f).lower(a).as_text()
-    assert "callback" not in txt.lower()
+    report = run_passes(txt, AuditContext(method="chebyshev",
+                                          obs_mode="off"),
+                        ("no-host-callback",))
+    assert report.ok, report.summary()
 
 
 def test_hlo_has_callbacks_when_tracing():
+    """Trace mode plants callbacks — and auditing that program under an
+    obs-off claim must FAIL, which is the pass's mutation proof."""
+    from repro.analysis import AuditContext, run_passes
     from repro.estimators.chebyshev import logdet_chebyshev
 
     obs.configure("trace")
@@ -294,6 +303,14 @@ def test_hlo_has_callbacks_when_tracing():
 
     txt = jax.jit(f).lower(a).as_text()
     assert "callback" in txt.lower()
+    report = run_passes(txt, AuditContext(method="chebyshev",
+                                          obs_mode="off"),
+                        ("no-host-callback",))
+    assert not report.ok, "trace-mode callbacks invisible to the pass"
+    # ...while a truthful trace-mode context accepts the same program
+    assert run_passes(txt, AuditContext(method="chebyshev",
+                                        obs_mode="trace"),
+                      ("no-host-callback",)).ok
 
 
 # ------------------------------------------------------- wall-time honesty
