@@ -57,13 +57,25 @@ ident absent from the committed ``bench_out/audit_baseline.json`` fails
 and a checker pass present in the baseline but missing from the fresh
 run fails (a dropped pass would otherwise pass vacuously).
 
+The fused-kernel records from ``benchmarks.kernels_bench`` are gated by
+`gate_kernels` (``--kernels``, a standalone mode like ``--scaling``):
+fused legs must keep the unfused leg's throughput (within-run ratio),
+f32 fused legs must be bit-identical (rel_err exactly 0), the bf16
+route is ceilinged at its documented error model, and absolute seconds
+are floored against ``bench_out/kernels_baseline.json``.  The condense
+gate additionally enforces the headline fused acceptance: at N=1024 the
+fresh ``staged|panel|fused`` route must beat the committed unfused
+``staged|panel`` baseline by >= 1.3x (GE-probe calibrated).
+
 Refresh the baselines after a legitimate perf/accuracy change:
 
     PYTHONPATH=src python -m benchmarks.estimators_bench \
         --sizes 256,512 --operator all --iters 3 --grad
     cp bench_out/estimators.json bench_out/estimators_baseline.json
-    PYTHONPATH=src python -m benchmarks.condense_bench --sizes 256,512
+    PYTHONPATH=src python -m benchmarks.condense_bench --sizes 256,512,1024
     cp bench_out/condense.json bench_out/condense_baseline.json
+    PYTHONPATH=src python -m benchmarks.kernels_bench
+    cp bench_out/kernels.json bench_out/kernels_baseline.json
     PYTHONPATH=src python -m benchmarks.serve_bench
     cp bench_out/serve.json bench_out/serve_baseline.json
     PYTHONPATH=src:. python -m benchmarks.fig7_8 --measured
@@ -79,12 +91,29 @@ import sys
 from pathlib import Path
 
 BENCH_DIR = Path(__file__).resolve().parent.parent / "bench_out"
-GATED_N = (256, 512, 529)
+GATED_N = (256, 512, 529, 1024)
 TIME_FACTOR = 2.0
 TIME_SLACK = 0.25
 ERR_FACTOR = 3.0
 ERR_FLOOR = 1e-8
 EXACT = {"mc", "mc_staged", "mc_blocked", "ge"}
+
+# fused-kernel gate (benchmarks.kernels_bench --kernels mode): within one
+# fresh run the fused leg must retain this fraction of the unfused leg's
+# throughput (machine-independent ratio; the fused condensation path is
+# several x faster, the estimator kernels at worst break even on CPU
+# where dispatch falls back to the identical jnp reference), f32 fused
+# legs must be BIT-identical to unfused (rel_err exactly 0 — fusion that
+# changes results is a correctness bug, not a perf trade), and the bf16
+# route's rel_err is ceilinged at the documented error model
+KERNEL_FUSED_MIN = 0.8
+KERNEL_BF16_ERR_MAX = 5e-3
+
+# the headline acceptance ratio: at this N the fused staged|panel engine
+# route must beat the committed unfused staged|panel baseline by this
+# factor (runner-speed calibrated through the GE probe)
+CONDENSE_FUSED_N = 1024
+CONDENSE_FUSED_SPEEDUP_MIN = 1.3
 
 # serving gate (benchmarks.serve_bench): the batched service must beat
 # the one-request-at-a-time path by this factor — a *ratio within one
@@ -386,6 +415,90 @@ def gate_audit(fresh_path: Path, baseline_path: Path,
     return checked
 
 
+def gate_kernels(fresh_path: Path, baseline_path: Path,
+                 failures: list) -> int:
+    """Gate the fused-kernel records (benchmarks.kernels_bench).
+
+    Three checks per (n, kernel) group in the fresh run: (1) the fused
+    leg keeps >= KERNEL_FUSED_MIN of the unfused leg's throughput — a
+    ratio within one fresh run, so no machine calibration; (2) every f32
+    fused leg reports rel_err exactly 0 against its unfused leg (fusion
+    must be bit-identical — a nonzero value is a correctness bug, never
+    a perf trade); (3) the bf16 route's rel_err stays under the
+    documented KERNEL_BF16_ERR_MAX error model.  Absolute seconds are
+    then floored against the committed baseline with the unfused rows
+    as the runner-speed probe (code the fused kernels do not share, so
+    a uniform fused regression cannot normalize itself away).
+    """
+    fresh = {(r["n"], r["kernel"], r["variant"]): r
+             for r in json.loads(fresh_path.read_text())}
+    base = {(r["n"], r["kernel"], r["variant"]): r
+            for r in json.loads(baseline_path.read_text())}
+    checked = 0
+
+    groups = sorted({(n, kern) for (n, kern, _v) in fresh})
+    for n, kern in groups:
+        unf = fresh.get((n, kern, "unfused"))
+        for variant in ("fused", "fused_bf16"):
+            rec = fresh.get((n, kern, variant))
+            if rec is None:
+                continue
+            flags = []
+            checked += 1
+            if unf is not None and rec["seconds"] > 0:
+                ratio = unf["seconds"] / rec["seconds"]
+                if ratio < KERNEL_FUSED_MIN:
+                    flags.append("FUSED THROUGHPUT REGRESSION")
+                    failures.append(
+                        f"kernels ({n}, {kern}, {variant}): only "
+                        f"x{ratio:.2f} the unfused leg's throughput "
+                        f"(gate: >= x{KERNEL_FUSED_MIN})")
+            else:
+                ratio = float("nan")
+            if variant == "fused" and rec["rel_err"] != 0.0:
+                flags.append("FUSION CHANGED RESULTS")
+                failures.append(
+                    f"kernels ({n}, {kern}, fused): rel_err "
+                    f"{rec['rel_err']:.3e} != 0 — f32 fusion must be "
+                    "bit-identical to the unfused leg")
+            if variant == "fused_bf16" \
+                    and rec["rel_err"] > KERNEL_BF16_ERR_MAX:
+                flags.append("BF16 ERROR MODEL EXCEEDED")
+                failures.append(
+                    f"kernels ({n}, {kern}, fused_bf16): rel_err "
+                    f"{rec['rel_err']:.3e} > ceiling "
+                    f"{KERNEL_BF16_ERR_MAX:.0e}")
+            print(f"{f'kernels: ({n}, {kern}, {variant})':56s} "
+                  f"x{ratio:.2f} vs unfused  "
+                  f"err={rec['rel_err']:.2e}  "
+                  f"{', '.join(flags) or 'ok'}")
+
+    # absolute wall time vs baseline, unfused rows as the speed probe
+    ratios = sorted(fresh[k]["seconds"] / b["seconds"]
+                    for k, b in base.items()
+                    if k[2] == "unfused" and k in fresh
+                    and b["seconds"] > 0)
+    speed = max(1.0, ratios[len(ratios) // 2]) if ratios else 1.0
+    print(f"kernels runner speed (unfused probe): x{speed:.2f} "
+          "vs baseline machine")
+    for k, b in sorted(base.items()):
+        got = fresh.get(k)
+        if got is None:
+            print(f"note: kernels baseline record {k} missing from "
+                  "fresh run")
+            continue
+        checked += 1
+        t_lim = TIME_FACTOR * b["seconds"] * speed + TIME_SLACK
+        flag = "ok" if got["seconds"] <= t_lim else "TIME REGRESSION"
+        if got["seconds"] > t_lim:
+            failures.append(
+                f"kernels {k}: {got['seconds']:.3f}s > limit "
+                f"{t_lim:.3f}s (baseline {b['seconds']:.3f}s)")
+        print(f"{'kernels: ' + str(k):56s} t={got['seconds']:.3f}s"
+              f"/{t_lim:.3f}s  {flag}")
+    return checked
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fresh", type=Path,
@@ -417,6 +530,14 @@ def main(argv=None):
                          "P >= 4 (real-interconnect runners; CI's "
                          "single-core fake devices use the overhead "
                          "thresholds)")
+    ap.add_argument("--kernels", action="store_true",
+                    help="gate ONLY the fused-kernel records "
+                         "(benchmarks.kernels_bench) against the "
+                         "committed kernels baseline")
+    ap.add_argument("--kernels-fresh", type=Path,
+                    default=BENCH_DIR / "kernels.json")
+    ap.add_argument("--kernels-baseline", type=Path,
+                    default=BENCH_DIR / "kernels_baseline.json")
     ap.add_argument("--audit", action="store_true",
                     help="gate ONLY the static-audit findings "
                          "(python -m repro.analysis --all --json) against "
@@ -447,6 +568,30 @@ def main(argv=None):
                 print(" -", f)
             return 1
         print(f"\nOK: {checked} audit checks within gates")
+        return 0
+
+    if args.kernels:
+        if not args.kernels_fresh.exists():
+            print(f"FAIL: {args.kernels_fresh} missing — run "
+                  "benchmarks.kernels_bench before the gate")
+            return 1
+        if not args.kernels_baseline.exists():
+            print(f"FAIL: {args.kernels_baseline} missing — commit a "
+                  "baseline (check_regression docstring, 'Refresh the "
+                  "baselines')")
+            return 1
+        failures = []
+        checked = gate_kernels(args.kernels_fresh, args.kernels_baseline,
+                               failures)
+        if checked == 0:
+            print("FAIL: fresh kernels run has none of the gated records")
+            return 1
+        if failures:
+            print(f"\nFAIL: {len(failures)} kernel regression(s):")
+            for f in failures:
+                print(" -", f)
+            return 1
+        print(f"\nOK: {checked} kernel checks within gates")
         return 0
 
     if args.scaling:
@@ -506,6 +651,27 @@ def main(argv=None):
         print(f"condense runner speed (ge probe): x{cspeed:.2f} "
               "vs baseline machine")
         compared += gate(cond_base, cond_fresh, cspeed, failures)
+
+        # headline fused acceptance: the fused staged|panel route must
+        # beat the committed UNFUSED staged|panel baseline by the
+        # speedup floor at the large gated size (cspeed calibrates the
+        # baseline's machine to this runner through the GE probe)
+        kb = (CONDENSE_FUSED_N, "staged|panel", "dense", "fwd")
+        kf = (CONDENSE_FUSED_N, "staged|panel|fused", "dense", "fwd")
+        if kb in cond_base and kf in cond_fresh:
+            compared += 1
+            speedup = (cond_base[kb]["seconds"] * cspeed
+                       / cond_fresh[kf]["seconds"])
+            flag = ("ok" if speedup >= CONDENSE_FUSED_SPEEDUP_MIN
+                    else "FUSED SPEEDUP REGRESSION")
+            print(f"{f'condense: N={CONDENSE_FUSED_N} fused speedup':56s}"
+                  f" x{speedup:.2f} "
+                  f"(need >= x{CONDENSE_FUSED_SPEEDUP_MIN})  {flag}")
+            if speedup < CONDENSE_FUSED_SPEEDUP_MIN:
+                failures.append(
+                    f"condense N={CONDENSE_FUSED_N}: fused staged|panel "
+                    f"only x{speedup:.2f} the committed unfused baseline "
+                    f"(gate: >= x{CONDENSE_FUSED_SPEEDUP_MIN})")
 
     # ---- serving path (benchmarks.serve_bench) --------------------------
     if not args.skip_serve and args.serve_baseline.exists():

@@ -1,19 +1,24 @@
 """Exact-path timing: the condensation engine's route matrix by N.
 
-Times every serial engine route (schedule x update) plus the GE baseline
-at the gated sizes, recording median wall seconds and the relative error
-against ``numpy.linalg.slogdet``.  Records go to
-``bench_out/condense.json`` as
+Times every serial engine route (schedule x update), the fused one-pass
+variants of the staged routes, and the GE baseline at the gated sizes,
+recording median wall seconds and the relative error against
+``numpy.linalg.slogdet``.  Records go to ``bench_out/condense.json`` as
 
     {"n": ..., "route": "staged|rank1", "seconds": ..., "rel_err": ...,
      "pass": "fwd"}
 
-and are gated by ``benchmarks.check_regression`` against the committed
+(fused routes spell as ``staged|panel|fused``) and are gated by
+``benchmarks.check_regression`` against the committed
 ``bench_out/condense_baseline.json`` exactly like the estimator records
-(2x time + slack, 3x rel_err + floor; the exact routes double as the
-runner-speed probe).  Refresh after a legitimate perf change:
+(2x time + slack, 3x rel_err + floor; the GE rows are the runner-speed
+probe), plus the headline fused acceptance — at N=1024 the fused
+staged|panel route must beat the committed unfused staged|panel
+baseline by >= 1.3x.  rank-1 routes are skipped above N=512 (O(n)
+dispatches per step; they gate nothing the staged rows don't).
+Refresh after a legitimate perf change:
 
-    PYTHONPATH=src python -m benchmarks.condense_bench --sizes 256,512
+    PYTHONPATH=src python -m benchmarks.condense_bench --sizes 256,512,1024
     cp bench_out/condense.json bench_out/condense_baseline.json
 """
 from __future__ import annotations
@@ -26,13 +31,21 @@ import numpy as np
 
 from benchmarks._common import OUT_DIR, timeit, write_csv
 
-DEFAULT_SIZES = (256, 512)
+DEFAULT_SIZES = (256, 512, 1024)
 SERIAL_ROUTES = [("serial", "rank1"), ("serial", "panel"),
                  ("staged", "rank1"), ("staged", "panel")]
+# fused one-pass variants of the staged routes (the production fused
+# path); check_regression enforces the staged|panel|fused speedup floor
+# against the committed staged|panel baseline at N=1024
+FUSED_ROUTES = [("staged", "rank1"), ("staged", "panel")]
+# rank-1 serial routes are O(n) separate device dispatches per step:
+# past this size they dominate bench wall time without gating anything
+# the staged rows don't already cover
+SLOW_ROUTE_MAX_N = 512
 
 
-def route_name(schedule: str, update: str) -> str:
-    return f"{schedule}|{update}"
+def route_name(schedule: str, update: str, fused: bool = False) -> str:
+    return f"{schedule}|{update}" + ("|fused" if fused else "")
 
 
 def main(argv=None):
@@ -59,11 +72,21 @@ def main(argv=None):
         a = jnp.asarray(a_np)
         runs = []
         for schedule, update in SERIAL_ROUTES:
+            if update == "rank1" and n > SLOW_ROUTE_MAX_N:
+                continue
             cfg = EngineConfig(schedule=schedule, update=update,
                                panel_k=args.k)
             fn = build_serial(cfg)
             x = pad_to_multiple(a, args.k) if update == "panel" else a
             runs.append((route_name(schedule, update), fn, x))
+        for schedule, update in FUSED_ROUTES:
+            if update == "rank1" and n > SLOW_ROUTE_MAX_N:
+                continue
+            cfg = EngineConfig(schedule=schedule, update=update,
+                               panel_k=args.k, fused=True)
+            fn = build_serial(cfg)
+            x = pad_to_multiple(a, args.k) if update == "panel" else a
+            runs.append((route_name(schedule, update, fused=True), fn, x))
         runs.append(("ge", slogdet_ge, a))
         for name, fn, x in runs:
             t = timeit(fn, x, iters=args.iters)

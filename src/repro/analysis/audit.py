@@ -49,19 +49,24 @@ def context_for(plan, kind: str = "forward") -> AuditContext:
     spec, cfg = plan.spec, plan.config
     schedule = update = None
     lookahead, panel_k = False, 32
+    fused, precision = False, None
     if isinstance(cfg, ExactConfig):
         ecfg = cfg.engine_config()
         schedule, update = ecfg.schedule, ecfg.update
         lookahead, panel_k = ecfg.lookahead, ecfg.panel_k
+        fused, precision = ecfg.fused, ecfg.precision
     n = plan.diagnostics.padded_n or spec.n
     label = plan.method if schedule is None else \
-        f"{plan.method}:{schedule}/{update}" + ("/la" if lookahead else "")
+        (f"{plan.method}:{schedule}/{update}"
+         + ("/la" if lookahead else "")
+         + ("/fused" if fused else "")
+         + (f"/{precision}" if precision else ""))
     if kind != "forward":
         label = f"{label} {kind}"
     return AuditContext(
         label=label, method=plan.method, kind=kind,
         schedule=schedule, update=update, lookahead=lookahead,
-        panel_k=panel_k, n=n,
+        panel_k=panel_k, fused=fused, precision=precision, n=n,
         devices=plan.diagnostics.device_count or 1,
         itemsize=jnp.dtype(spec.dtype).itemsize, dtype=spec.dtype,
         obs_mode=obs.mode(),
@@ -187,7 +192,8 @@ def audit_plan(plan, pass_ids: Optional[Sequence[str]] = None,
 
 def default_grid(n: int = 32, panel_k: int = 8) -> List[dict]:
     """The audit matrix from the CI contract: every engine route
-    (serial|staged|mesh x rank1|panel x lookahead on/off) plus the
+    (serial|staged|mesh x rank1|panel x lookahead on/off), the fused
+    one-pass and bf16 mixed-precision engine variants, plus the
     estimator methods with their backward passes."""
     entries = []
     for schedule in ("serial", "staged", "mesh"):
@@ -196,6 +202,14 @@ def default_grid(n: int = 32, panel_k: int = 8) -> List[dict]:
                 entries.append(dict(method="exact", schedule=schedule,
                                     update=update, lookahead=la, n=n,
                                     k=panel_k))
+    # the PR-10 engine variants: one-pass fused steps (serial/staged
+    # only) and the quantized-GEMM route, alone and combined
+    entries.append(dict(method="exact", schedule="staged", update="rank1",
+                        n=n, k=panel_k, fused=True))
+    entries.append(dict(method="exact", schedule="staged", update="panel",
+                        n=n, k=panel_k, fused=True, precision="bf16"))
+    entries.append(dict(method="exact", schedule="staged", update="panel",
+                        n=n, k=panel_k, precision="bf16"))
     for method in ("chebyshev", "slq"):
         entries.append(dict(method=method, n=n, grad=True,
                             num_probes=4, seed=0))
@@ -269,6 +283,7 @@ def audit_artifact(path, pass_ids: Optional[Sequence[str]] = None
         schedule=ecfg.get("schedule"), update=ecfg.get("update"),
         lookahead=bool(ecfg.get("lookahead")),
         panel_k=int(ecfg.get("k") or 32),
+        fused=bool(ecfg.get("fused")), precision=ecfg.get("precision"),
         n=int(header.get("padded_n") or spec["n"]),
         itemsize=jnp.dtype(spec["dtype"]).itemsize, dtype=spec["dtype"],
         obs_mode="off",     # exported programs must be telemetry-free

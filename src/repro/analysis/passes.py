@@ -68,6 +68,12 @@ class AuditContext:
     ``method``    resolved plan method ("exact", "chebyshev", "slq", ...)
     ``kind``      "forward" | "backward" | "export"
     ``schedule``/``update``/``lookahead``/``panel_k`` engine axes (exact)
+    ``fused``     the engine's one-pass condensation steps are on (the
+                  per-step pivot/swap/update scopes collapse into
+                  ``engine.fused_step``)
+    ``precision`` the engine's mixed-precision route (``"bf16"`` -> the
+                  program MUST lower bf16-operand contractions; the
+                  bf16 -> f32 accumulate converts are intentional)
     ``n``/``devices``/``itemsize``  payload-budget geometry
     ``dtype``     canonical dtype string of the planned computation
     ``obs_mode``  the REPRO_OBS mode the program was lowered under
@@ -83,6 +89,8 @@ class AuditContext:
     update: Optional[str] = None
     lookahead: bool = False
     panel_k: int = 32
+    fused: bool = False
+    precision: Optional[str] = None
     n: int = 0
     devices: int = 1
     itemsize: int = 8
@@ -241,14 +249,38 @@ def _collective_payload_budget(mod: Module,
 _32BIT = ("float32", "bfloat16", "float16")
 
 
+_CONTRACTION_OPS = ("dot", "dot-general", "multiply")
+
+
 @register_pass(
     "dtype-discipline",
     "no silent f32/bf16/f16 -> f64 promotions in a sub-f64 program "
-    "(padding helpers and dtype-less literals are the usual culprits)")
+    "(padding helpers and dtype-less literals are the usual culprits); "
+    "with precision='bf16' the program must actually lower bf16-operand "
+    "contractions (quantize-then-upcast-before-multiply is inert)")
 def _dtype_discipline(mod: Module, ctx: AuditContext) -> List[Finding]:
+    out: List[Finding] = []
+    if ctx.precision == "bf16":
+        # the mixed-precision route quantizes GEMM/outer operands to
+        # bf16 and accumulates in the buffer dtype.  bf16 -> f32
+        # converts are therefore INTENTIONAL here (the accumulate leg,
+        # not a silent upcast) — but at least one contraction must
+        # consume bf16 operands, else the quantization was optimized
+        # away / upcast before the multiply and the route is inert.
+        has_bf16_mul = any(
+            any(s.dtype == "bf16" for s in i.operand_shapes)
+            for i in mod.instructions if i.opcode in _CONTRACTION_OPS)
+        if not has_bf16_mul:
+            out.append(Finding(
+                pass_id="dtype-discipline", severity="error",
+                message="bf16-silent-upcast: precision='bf16' program "
+                        "lowers no bf16-operand contraction — operands "
+                        "were promoted back to full precision before "
+                        "the multiply, so the mixed-precision route is "
+                        "inert",
+                where="precision=bf16"))
     if ctx.dtype not in _32BIT:
-        return []           # an f64 plan is entitled to f64 arithmetic
-    out = []
+        return out          # an f64 plan is entitled to f64 arithmetic
     for i in mod.instructions:
         if i.opcode != "convert":
             continue
@@ -297,6 +329,11 @@ def expected_engine_stages(ctx: AuditContext) -> Dict[str, bool]:
         (P, P) tail reduction runs the serial condensation redundantly
         on every device and its step re-introduces the pivot scope.
       * ``engine.swap``/``engine.update``: every schedule's step.
+      * ``fused=True`` (serial/staged only): the per-step pivot/swap/
+        update scopes collapse into ``engine.fused_step`` — the one-pass
+        kernel selects the pivot, swaps, and updates inside a single
+        scope, so the three per-step scopes MUST be absent and
+        ``engine.fused_step`` MUST be present.
 
     The map is exact for the supported audit geometries (panel kernels
     keep a rank-1 remainder, i.e. ``(n/P - 1) % k != 0``); degenerate
@@ -312,10 +349,12 @@ def expected_engine_stages(ctx: AuditContext) -> Dict[str, bool]:
             la_traces = ctx.n >= 2
     pivot_subsumed = (bool(la_traces) and ctx.update == "rank1"
                       and ctx.devices <= 1)
+    fused = bool(ctx.fused) and not mesh
     return {
-        "engine.pivot": not pivot_subsumed,
-        "engine.swap": True,
-        "engine.update": True,
+        "engine.pivot": not pivot_subsumed and not fused,
+        "engine.swap": not fused,
+        "engine.update": not fused,
+        "engine.fused_step": fused,
         "engine.mesh_tail": mesh,
         "engine.broadcast": mesh,
         "engine.lookahead_factor": bool(la_traces),

@@ -49,14 +49,26 @@ _TABLE_NAME = "roofline_calibration.json"
 _EST_SLAB = 32
 
 
+# modeled bf16:native GEMM throughput ratio when a table carries no
+# measured bf16 entry — MXU parts run bf16 matmuls at ~2x the f32 rate
+_BF16_GEMM_SPEEDUP = 2.0
+
+
 @dataclass(frozen=True)
 class Calibration:
-    """Per-device roofline terms; see the module docstring."""
+    """Per-device roofline terms; see the module docstring.
+
+    ``gemm_flops_bf16`` is the optional measured bf16 GEMM rate (the
+    mixed-precision engine route); absent, `gemm_rate` models it as
+    ``_BF16_GEMM_SPEEDUP x gemm_flops`` so the selector still prices
+    bf16 and native separately.
+    """
     gemm_flops: float = 4.0e10
     stream_bytes: float = 1.5e10
     collective_lat: float = 2.0e-5
     collective_bytes: float = 4.0e9
     source: str = "static-default"
+    gemm_flops_bf16: Optional[float] = None
 
     def __post_init__(self):
         for name in ("gemm_flops", "stream_bytes", "collective_lat",
@@ -64,6 +76,21 @@ class Calibration:
             v = float(getattr(self, name))
             if not v > 0:
                 raise ValueError(f"calibration {name} must be > 0, got {v}")
+        if self.gemm_flops_bf16 is not None \
+                and not float(self.gemm_flops_bf16) > 0:
+            raise ValueError(
+                f"calibration gemm_flops_bf16 must be > 0, "
+                f"got {self.gemm_flops_bf16}")
+
+    def gemm_rate(self, precision: Optional[str] = None) -> float:
+        """Sustained GEMM FLOP/s for an engine precision route."""
+        if precision in (None, "f32", "f64", "native"):
+            return float(self.gemm_flops)
+        if precision == "bf16":
+            if self.gemm_flops_bf16 is not None:
+                return float(self.gemm_flops_bf16)
+            return float(self.gemm_flops) * _BF16_GEMM_SPEEDUP
+        raise ValueError(f"unknown precision {precision!r}")
 
 
 STATIC_DEFAULT = Calibration()
@@ -88,12 +115,15 @@ def _load(path_str: Optional[str]) -> Calibration:
         raw = json.loads(Path(path_str).read_text())
     except (OSError, json.JSONDecodeError) as e:
         raise ValueError(f"cannot read calibration table {path_str}: {e}")
+    bf16 = raw.get("bf16") or {}
+    bf16_rate = bf16.get("gemm_flops", raw.get("gemm_flops_bf16"))
     return Calibration(
         gemm_flops=float(raw["gemm_flops"]),
         stream_bytes=float(raw["stream_bytes"]),
         collective_lat=float(raw["collective_lat"]),
         collective_bytes=float(raw["collective_bytes"]),
         source=str(raw.get("source", f"measured:{path_str}")),
+        gemm_flops_bf16=None if bf16_rate is None else float(bf16_rate),
     )
 
 
@@ -115,9 +145,10 @@ def clear_calibration_cache():
 # --------------------------------------------------------------------------
 
 def exact_cost(n: int, devices: int, cal: Calibration, *,
-               update: str = "rank1", panel_k: int = 32,
+               update: str = "rank1", panel_k: Optional[int] = None,
                itemsize: int = 8, batch: int = 1,
-               lookahead: bool = False) -> float:
+               lookahead: bool = False,
+               precision: Optional[str] = None) -> float:
     """Modeled wall time of an exact condensation route.
 
     ``devices == 1`` prices the serial/staged schedules; ``devices > 1``
@@ -125,6 +156,12 @@ def exact_cost(n: int, devices: int, cal: Calibration, *,
     (or K-row panel) still pays one broadcast, so the communication term
     is NOT divided by P.  Batched stacks run one device per matrix (no
     collectives), so ``batch`` scales the compute term only.
+
+    ``panel_k=None`` resolves through the calibration-driven tile
+    autotuner (`repro.kernels.autotune`) — the same resolution the
+    kernels use, so ``method="auto"`` prices the geometry that actually
+    runs.  ``precision="bf16"`` prices the GEMM term at the measured (or
+    modeled) bf16 rate.
 
     ``lookahead`` prices the pipelined mesh schedule: the double-buffered
     broadcast overlaps the bulk trailing update, hiding up to the
@@ -134,10 +171,14 @@ def exact_cost(n: int, devices: int, cal: Calibration, *,
     """
     if n <= 1:
         return 0.0
+    if panel_k is None:
+        from repro.kernels.autotune import resolved_panel_k
+        panel_k = resolved_panel_k(n, itemsize=itemsize,
+                                   precision=precision, cal=cal)
     flops = (2.0 / 3.0) * float(n) ** 3
     if update == "panel":
         # rank-K trailing updates are GEMMs: MXU/peak-FLOP bound
-        compute = flops / cal.gemm_flops
+        compute = flops / cal.gemm_rate(precision)
     else:
         # rank-1 updates stream the live block once per step: with staged
         # scheduling the touched area is ~1.5 x sum_m m^2 ~ n^3/2 elements,

@@ -79,6 +79,13 @@ class ExactConfig:
                    (bit-identical results; see `engine.EngineConfig`).
                    Requires ``schedule`` unset (mesh resolves when a mesh
                    is present) or explicitly ``"mesh"``.
+    ``fused``    — serial/staged-only: one-pass condensation steps and a
+                   composed-permutation gather for the panel swaps
+                   (bit-identical results; see `engine.EngineConfig`).
+    ``precision`` — ``None`` (native) or ``"bf16"``: quantize GEMM /
+                   outer-product operands to bfloat16; the buffer and
+                   every sign/parity/log accumulator stay in the input
+                   dtype (error model in docs/api.md).
 
     Baseline-only knob: ``nb`` — block-cyclic tile size of the
     ScaLAPACK-style LU (``plu``).  Methods that do not use a knob ignore
@@ -92,6 +99,8 @@ class ExactConfig:
     shrink: float = 0.75
     min_size: int = 64
     lookahead: bool = False
+    fused: bool = False
+    precision: Optional[str] = None
 
     def __post_init__(self):
         _require(int(self.k) >= 1, f"k must be >= 1, got {self.k}")
@@ -112,6 +121,12 @@ class ExactConfig:
                  "lookahead pipelines the mesh schedule's broadcast; it "
                  f"requires schedule='mesh' (or unset), got "
                  f"{self.schedule!r}")
+        _require(not self.fused or self.schedule != "mesh",
+                 "fused one-pass steps are a serial/staged optimization; "
+                 "the mesh schedule pipelines via lookahead instead")
+        _require(self.precision in (None, "bf16"),
+                 f"unknown precision {self.precision!r}; "
+                 "one of (None, 'bf16')")
 
     def resolved(self, *, mesh_present: bool = False) -> "ExactConfig":
         """Pin the engine axes (plan-time resolution of the defaults).
@@ -127,6 +142,11 @@ class ExactConfig:
             raise ValueError(
                 "lookahead requires the mesh schedule: pass a mesh (or "
                 f"schedule='mesh'); resolution chose {sched!r}")
+        if self.fused and sched == "mesh":
+            raise ValueError(
+                "fused one-pass steps are a serial/staged optimization "
+                "(the mesh schedule pipelines via lookahead); drop the "
+                "mesh or pass schedule='serial'/'staged' explicitly")
         upd = self.update or "rank1"
         backend = resolve_backend(self.backend)
         if (sched == self.schedule and upd == self.update
@@ -142,7 +162,8 @@ class ExactConfig:
         return EngineConfig(schedule=self.schedule, update=self.update,
                             panel_k=self.k, backend=self.backend,
                             shrink=self.shrink, min_size=self.min_size,
-                            lookahead=self.lookahead)
+                            lookahead=self.lookahead, fused=self.fused,
+                            precision=self.precision)
 
 
 @dataclass(frozen=True)

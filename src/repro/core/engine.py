@@ -89,6 +89,19 @@ class EngineConfig:
                   broadcast collective is double-buffered and overlaps
                   compute instead of serializing with it.  Bit-identical
                   results (asserted in tests/test_engine.py).
+    ``fused``     serial/staged-only: run the condensation step as ONE
+                  pass over the buffer — pivot argmax + §2.4 swap + the
+                  rank-1 update in a single fused kernel (the swap
+                  becomes a per-column select), and the panel schedule's
+                  K sequential swap scatters become one composed-
+                  permutation gather.  Bit-identical results (asserted
+                  in tests/test_engine.py); the mesh schedule pipelines
+                  via ``lookahead`` instead.
+    ``precision`` ``None`` (native) or ``"bf16"``: quantize the
+                  GEMM / outer-product operands to bfloat16 while the
+                  buffer and all sign/parity/log accumulators stay in
+                  the input dtype (the mixed-precision MXU route; error
+                  model documented in docs/api.md).
     Frozen + hashable so it can ride inside `ExactConfig` and key the
     plan cache.
     """
@@ -99,6 +112,8 @@ class EngineConfig:
     shrink: float = 0.75
     min_size: int = 64
     lookahead: bool = False
+    fused: bool = False
+    precision: Optional[str] = None
 
     def __post_init__(self):
         if self.schedule not in SCHEDULES:
@@ -120,6 +135,14 @@ class EngineConfig:
             raise ValueError(
                 "lookahead pipelines the mesh schedule's broadcast; it "
                 f"requires schedule='mesh', got {self.schedule!r}")
+        if self.fused and self.schedule == "mesh":
+            raise ValueError(
+                "fused one-pass steps are a serial/staged optimization; "
+                "the mesh schedule pipelines via lookahead instead")
+        if self.precision not in (None, "bf16"):
+            raise ValueError(
+                f"unknown precision {self.precision!r}; one of "
+                "(None, 'bf16')")
 
 
 # legacy route string -> (schedule, update); the historical spellings all
@@ -150,19 +173,25 @@ def resolve_backend(backend: str) -> str:
     return _kops.kernel_backend()
 
 
-def _hooks(backend: str) -> Tuple[Optional[Callable], Optional[Callable]]:
+def _hooks(backend: str, precision: Optional[str] = None,
+           ) -> Tuple[Optional[Callable], Optional[Callable]]:
     """(update_fn, gemm_fn) for the resolved backend; None == inline jnp.
 
     The resolved backend is passed explicitly to the kernel entry points:
     an engine built for "pallas"/"interpret" always runs the kernel
     bodies, never the jnp reference, whatever the env var says later.
+    A mixed-precision route (``precision="bf16"``) always goes through
+    the kernel entry points — even on the xla backend — so the operand
+    quantization lives in exactly one place (kernels/ops.py).
     """
     backend = resolve_backend(backend)
-    if backend == "xla":
+    if backend == "xla" and precision is None:
         return None, None
     from repro.kernels import ops as _kops
-    return (functools.partial(_kops.rank1_update, backend=backend),
-            functools.partial(_kops.panel_update, backend=backend))
+    return (functools.partial(_kops.rank1_update, backend=backend,
+                              precision=precision),
+            functools.partial(_kops.panel_update, backend=backend,
+                              precision=precision))
 
 
 # --------------------------------------------------------------------------
@@ -209,54 +238,68 @@ def perm_parity(perm: np.ndarray) -> float:
 # --------------------------------------------------------------------------
 
 def _condense_step(buf: jax.Array, t, n_total: int, sign, logdet, *,
-                   update_fn=None):
+                   update_fn=None, step_fn=None):
     """One condensation step on the full static buffer.
 
     Live region at step ``t``: rows [t, N), cols [0, N - t).  Pivot row is
     row ``t`` (serial schedule); pivot column is the max-abs entry of the
     live part of row ``t``.  Returns the updated (buf, sign, logdet).
+
+    ``step_fn(buf, t) -> (buf, l, p)`` replaces the three-pass pivot /
+    swap / update sequence with the fused one-pass kernel
+    (`repro.kernels.ops.fused_condense_step`) — bit-identical buffers;
+    the sign/parity/log bookkeeping below is shared by both paths.
     """
     n = n_total
     m = n - t                       # live size (traced)
-    col_ids = jnp.arange(n)
-    live_col = col_ids < m
+    last = m - 1
 
-    with obs.stage("engine.pivot"):
-        row = buf[t]                                    # (N,)
-        absrow = jnp.where(live_col, jnp.abs(row), -jnp.inf)
-        l = jnp.argmax(absrow)                          # pivot column (traced)
-        p = row[l]                                      # pivot value
-
-    # --- column swap l <-> m-1 (paper §2.4) --------------------------------
-    with obs.stage("engine.swap"):
-        last = m - 1
-        col_l = buf[:, l]
-        col_last = buf[:, last]
-        buf = buf.at[:, l].set(col_last)
-        buf = buf.at[:, last].set(col_l)
+    if step_fn is not None:
+        with obs.stage("engine.fused_step"):
+            buf, l, p = step_fn(buf, t)
         swap_sign = jnp.where(l == last, 1.0, -1.0).astype(buf.dtype)
+    else:
+        col_ids = jnp.arange(n)
+        live_col = col_ids < m
 
-        # pivot row in swapped coordinates, normalized by the pivot (§2.3).
-        row = row.at[l].set(row[last])
-        # row[last] still holds the pre-swap value; the true pivot now sits at
-        # position `last` in the buffer.  Force it so pr[last] == 1 exactly,
-        # which zeroes the pivot column for all updated rows.
-        row = row.at[last].set(p)
-        safe_p = guarded_pivot(p, buf.dtype)
-        pr = jnp.where(p == 0, jnp.zeros_like(row), row / safe_p)
+        with obs.stage("engine.pivot"):
+            row = buf[t]                                # (N,)
+            absrow = jnp.where(live_col, jnp.abs(row), -jnp.inf)
+            l = jnp.argmax(absrow)                      # pivot col (traced)
+            p = row[l]                                  # pivot value
 
-        # pivot column entries; zero at the pivot row so it stays untouched.
-        pc = buf[:, last]
-        pc = pc.at[t].set(0.0)
-        # Rows above t are dead; zero them too so the baseline buffer stays
-        # finite (cosmetic — they are never read again).
-        pc = jnp.where(jnp.arange(n) < t, 0.0, pc)
+        # --- column swap l <-> m-1 (paper §2.4) ----------------------------
+        with obs.stage("engine.swap"):
+            col_l = buf[:, l]
+            col_last = buf[:, last]
+            buf = buf.at[:, l].set(col_last)
+            buf = buf.at[:, last].set(col_l)
+            swap_sign = jnp.where(l == last, 1.0, -1.0).astype(buf.dtype)
 
-    with obs.stage("engine.update"):
-        if update_fn is None:
-            buf = buf - jnp.outer(pc, pr)
-        else:
-            buf = update_fn(buf, pc, pr)
+            # pivot row in swapped coordinates, normalized by the pivot
+            # (§2.3).
+            row = row.at[l].set(row[last])
+            # row[last] still holds the pre-swap value; the true pivot now
+            # sits at position `last` in the buffer.  Force it so
+            # pr[last] == 1 exactly, which zeroes the pivot column for all
+            # updated rows.
+            row = row.at[last].set(p)
+            safe_p = guarded_pivot(p, buf.dtype)
+            pr = jnp.where(p == 0, jnp.zeros_like(row), row / safe_p)
+
+            # pivot column entries; zero at the pivot row so it stays
+            # untouched.
+            pc = buf[:, last]
+            pc = pc.at[t].set(0.0)
+            # Rows above t are dead; zero them too so the baseline buffer
+            # stays finite (cosmetic — they are never read again).
+            pc = jnp.where(jnp.arange(n) < t, 0.0, pc)
+
+        with obs.stage("engine.update"):
+            if update_fn is None:
+                buf = buf - jnp.outer(pc, pr)
+            else:
+                buf = update_fn(buf, pc, pr)
 
     # sign bookkeeping: pivot sign, column swap, and Laplace expansion of the
     # pivot (active row 0, active column m-1) => (-1)^(m-1).
@@ -267,7 +310,7 @@ def _condense_step(buf: jax.Array, t, n_total: int, sign, logdet, *,
 
 
 def condense_steps(buf: jax.Array, n_steps: int, *, t0: int = 0,
-                   update_fn=None):
+                   update_fn=None, step_fn=None):
     """Run ``n_steps`` condensation steps starting at step offset ``t0``.
 
     Returns (buf, sign, logdet) with sign/logdet the *contribution* of these
@@ -277,7 +320,8 @@ def condense_steps(buf: jax.Array, n_steps: int, *, t0: int = 0,
 
     def body(t, carry):
         b, s, ld = carry
-        return _condense_step(b, t, n, s, ld, update_fn=update_fn)
+        return _condense_step(b, t, n, s, ld, update_fn=update_fn,
+                              step_fn=step_fn)
 
     # Derive the initial sign/logdet carries from `buf` so they inherit its
     # varying-manual-axes type when called inside shard_map (tail solve).
@@ -285,14 +329,40 @@ def condense_steps(buf: jax.Array, n_steps: int, *, t0: int = 0,
     return lax.fori_loop(t0, t0 + n_steps, body, (buf, zero + 1, zero))
 
 
-@functools.partial(jax.jit, static_argnames=("use_kernel",))
-def condense_full(a: jax.Array, *, use_kernel=False):
+def _step_hooks(use_kernel, fused: bool, precision: Optional[str]):
+    """(update_fn, step_fn) for the serial/staged rank-1 drivers.
+
+    ``fused`` routes every step through the one-pass kernel entry;
+    otherwise a kernel request or a mixed-precision route builds the
+    classic rank-1 update hook (precision quantization lives in
+    kernels/ops.py).  (None, None) == inline jnp, the historical path.
+    """
+    req = _kernel_request(use_kernel)
+    if fused:
+        from repro.kernels import ops as _kops
+        return None, functools.partial(_kops.fused_condense_step,
+                                       backend=req or "xla",
+                                       precision=precision)
+    if req is not None or precision is not None:
+        from repro.kernels import ops as _kops
+        return functools.partial(_kops.rank1_update, backend=req or "xla",
+                                 precision=precision), None
+    return None, None
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("use_kernel", "fused", "precision"))
+def condense_full(a: jax.Array, *, use_kernel=False, fused: bool = False,
+                  precision: Optional[str] = None):
     """Full serial rank-1 condensation — (sign, logabsdet).
 
     The faithful baseline (legacy `slogdet_condense`): every step updates
     the full static buffer.  ``use_kernel=True`` forces the Pallas rank-1
     kernel body (interpret mode off-TPU) regardless of the backend probe;
     a backend string ("pallas" | "interpret") pins it exactly.
+    ``fused=True`` runs each step as ONE pass over the buffer (pivot +
+    swap + update, bit-identical); ``precision="bf16"`` quantizes the
+    rank-1 operands only.
     """
     n = a.shape[0]
     if a.ndim != 2 or a.shape[1] != n:
@@ -302,13 +372,9 @@ def condense_full(a: jax.Array, *, use_kernel=False):
     if n == 1:
         return jnp.sign(a[0, 0]), jnp.log(jnp.abs(a[0, 0]))
 
-    update_fn = None
-    req = _kernel_request(use_kernel)
-    if req is not None:
-        from repro.kernels import ops as _kops
-        update_fn = functools.partial(_kops.rank1_update, backend=req)
-
-    buf, sign, logdet = condense_steps(a, n - 1, update_fn=update_fn)
+    update_fn, step_fn = _step_hooks(use_kernel, fused, precision)
+    buf, sign, logdet = condense_steps(a, n - 1, update_fn=update_fn,
+                                       step_fn=step_fn)
     p = buf[n - 1, 0]
     return sign * jnp.sign(p), logdet + jnp.log(jnp.abs(p))
 
@@ -383,7 +449,7 @@ def panel_factor(panel: jax.Array, m0, *, r_pos=0, update_fn=None):
 
 
 def apply_panel(block: jax.Array, R: jax.Array, ls: jax.Array, m0,
-                row_mask: jax.Array, *, gemm_fn=None):
+                row_mask: jax.Array, *, gemm_fn=None, fused: bool = False):
     """Apply a factorized panel to a trailing row block.
 
     Args:
@@ -394,21 +460,38 @@ def apply_panel(block: jax.Array, R: jax.Array, ls: jax.Array, m0,
 
     Returns the updated block.  ``gemm_fn(block, C, R)`` may override the
     final GEMM (Pallas kernel hook); default is ``block - C @ R``.
+    ``fused=True`` replaces the K sequential swap scatters (2K passes
+    over the block) with ONE composed-permutation gather — pure data
+    movement, bit-identical, and the panel schedule's dominant traffic
+    saving (the swaps re-stream the whole trailing block per panel).
     """
     Lb, N = block.shape
     K = R.shape[0]
 
-    # replay the K column swaps in order: swap ls[k] <-> (m0-1-k)
-    def swap_body(k, blk):
-        l = ls[k]
-        last = m0 - 1 - k
-        cl = jnp.take(blk, l, axis=1)
-        clast = jnp.take(blk, last, axis=1)
-        blk = blk.at[:, l].set(clast)
-        blk = blk.at[:, last].set(cl)
-        return blk
+    if fused:
+        # compose the K swaps on an O(N) index vector, then gather once
+        def perm_body(k, idx):
+            l = ls[k]
+            last = m0 - 1 - k
+            il = idx[l]
+            ilast = idx[last]
+            return idx.at[l].set(ilast).at[last].set(il)
 
-    block = lax.fori_loop(0, K, swap_body, block)
+        with obs.stage("engine.panel_swap_gather"):
+            idx = lax.fori_loop(0, K, perm_body, jnp.arange(N))
+            block = jnp.take(block, idx, axis=1)
+    else:
+        # replay the K column swaps in order: swap ls[k] <-> (m0-1-k)
+        def swap_body(k, blk):
+            l = ls[k]
+            last = m0 - 1 - k
+            cl = jnp.take(blk, l, axis=1)
+            clast = jnp.take(blk, last, axis=1)
+            blk = blk.at[:, l].set(clast)
+            blk = blk.at[:, last].set(cl)
+            return blk
+
+        block = lax.fori_loop(0, K, swap_body, block)
 
     # pivot-column block, reversed so column k corresponds to pivot k
     pc_cols = lax.dynamic_slice(block, (0, m0 - K), (Lb, K))   # (Lb, K)
@@ -471,7 +554,7 @@ def panel_factor_dispatch(use_kernel):
 
 def panel_rounds_serial(buf: jax.Array, n_panels: int, k: int, *,
                         q0: int = 0, gemm_fn=None, update_fn=None,
-                        factor_fn=None):
+                        factor_fn=None, fused: bool = False):
     """Run ``n_panels`` serial K-panels starting at panel offset ``q0``.
 
     The serial-schedule panel loop shared by the blocked driver and the
@@ -489,7 +572,8 @@ def panel_rounds_serial(buf: jax.Array, n_panels: int, k: int, *,
         panel = lax.dynamic_slice(b, (t0, 0), (k, n))
         R, ls, psign, plogdet = factor_fn(panel, m0, update_fn=update_fn)
         row_mask = (rows >= t0 + k).astype(b.dtype)
-        b = apply_panel(b, R, ls, m0, row_mask, gemm_fn=gemm_fn)
+        b = apply_panel(b, R, ls, m0, row_mask, gemm_fn=gemm_fn,
+                        fused=fused)
         # park the factorized rows back so dead region stays finite
         b = lax.dynamic_update_slice(b, R, (t0, 0))
         return b, sign * psign, logdet + plogdet
@@ -498,8 +582,20 @@ def panel_rounds_serial(buf: jax.Array, n_panels: int, k: int, *,
     return lax.fori_loop(q0, q0 + n_panels, body, (buf, zero + 1, zero))
 
 
-@functools.partial(jax.jit, static_argnames=("k", "use_kernel"))
-def blocked_full(a: jax.Array, *, k: int = 32, use_kernel=False):
+def _gemm_hook(use_kernel, precision: Optional[str]):
+    """The trailing-GEMM hook for the serial/staged panel drivers."""
+    req = _kernel_request(use_kernel)
+    if req is None and precision is None:
+        return None
+    from repro.kernels import ops as _kops
+    return functools.partial(_kops.panel_update, backend=req or "xla",
+                             precision=precision)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "use_kernel", "fused", "precision"))
+def blocked_full(a: jax.Array, *, k: int = 32, use_kernel=False,
+                 fused: bool = False, precision: Optional[str] = None):
     """Serial blocked condensation: panels of ``k`` rows, rank-k GEMMs.
 
     Numerically equivalent to `condense_full` up to roundoff; exercises the
@@ -509,22 +605,24 @@ def blocked_full(a: jax.Array, *, k: int = 32, use_kernel=False):
     if a.ndim != 2 or a.shape[1] != n:
         raise ValueError(f"expected square matrix, got {a.shape}")
     if n <= k:
-        return condense_full(a, use_kernel=use_kernel)
+        return condense_full(a, use_kernel=use_kernel, fused=fused,
+                             precision=precision)
 
-    gemm_fn = None
-    req = _kernel_request(use_kernel)
-    if req is not None:
-        from repro.kernels import ops as _kops
-        gemm_fn = functools.partial(_kops.panel_update, backend=req)
-
+    gemm_fn = _gemm_hook(use_kernel, precision)
     n_panels = (n - 1) // k
     buf, sign, logdet = panel_rounds_serial(
         a, n_panels, k, gemm_fn=gemm_fn,
-        factor_fn=panel_factor_dispatch(use_kernel))
+        factor_fn=panel_factor_dispatch(use_kernel), fused=fused)
 
     # remainder: rank-1 steps from t0 = n_panels*k to n-2, then the 1x1 tail
     t0 = n_panels * k
-    buf, rsign, rlogdet = condense_steps(buf, n - 1 - t0, t0=t0)
+    if fused or precision is not None:
+        update_fn, step_fn = _step_hooks(use_kernel, fused, precision)
+    else:
+        update_fn, step_fn = None, None  # historical inline-jnp remainder
+    buf, rsign, rlogdet = condense_steps(buf, n - 1 - t0, t0=t0,
+                                         update_fn=update_fn,
+                                         step_fn=step_fn)
     p = buf[n - 1, 0]
     return (sign * rsign * jnp.sign(p),
             logdet + rlogdet + jnp.log(jnp.abs(p)))
@@ -549,30 +647,42 @@ def stage_schedule(n: int, shrink: float, min_size: int):
     return sched
 
 
-@functools.partial(jax.jit, static_argnames=("steps",))
-def _staged_stage_rank1(buf, steps: int):
-    b, s, ld = condense_steps(buf, steps)
+@functools.partial(jax.jit, static_argnames=("steps", "use_kernel", "fused",
+                                             "precision"))
+def _staged_stage_rank1(buf, steps: int, use_kernel=False,
+                        fused: bool = False,
+                        precision: Optional[str] = None):
+    if fused or precision is not None:
+        update_fn, step_fn = _step_hooks(use_kernel, fused, precision)
+    else:
+        update_fn, step_fn = None, None  # historical inline-jnp stages
+    b, s, ld = condense_steps(buf, steps, update_fn=update_fn,
+                              step_fn=step_fn)
     n = buf.shape[0]
     live = lax.slice(b, (steps, 0), (n, n - steps))
     return live, s, ld
 
 
-@functools.partial(jax.jit, static_argnames=("steps", "k", "use_kernel"))
-def _staged_stage_panel(buf, steps: int, k: int, use_kernel=False):
+@functools.partial(jax.jit, static_argnames=("steps", "k", "use_kernel",
+                                             "fused", "precision"))
+def _staged_stage_panel(buf, steps: int, k: int, use_kernel=False,
+                        fused: bool = False,
+                        precision: Optional[str] = None):
     """One staged stage eliminating ``steps`` rows via K-panels + remainder."""
-    gemm_fn = None
-    req = _kernel_request(use_kernel)
-    if req is not None:
-        from repro.kernels import ops as _kops
-        gemm_fn = functools.partial(_kops.panel_update, backend=req)
+    gemm_fn = _gemm_hook(use_kernel, precision)
     n = buf.shape[0]
     n_panels = steps // k
     b, s, ld = panel_rounds_serial(
         buf, n_panels, k, gemm_fn=gemm_fn,
-        factor_fn=panel_factor_dispatch(use_kernel))
+        factor_fn=panel_factor_dispatch(use_kernel), fused=fused)
     rem = steps - n_panels * k
     if rem > 0:
-        b, rs, rld = condense_steps(b, rem, t0=n_panels * k)
+        if fused or precision is not None:
+            update_fn, step_fn = _step_hooks(use_kernel, fused, precision)
+        else:
+            update_fn, step_fn = None, None
+        b, rs, rld = condense_steps(b, rem, t0=n_panels * k,
+                                    update_fn=update_fn, step_fn=step_fn)
         s, ld = s * rs, ld + rld
     live = lax.slice(b, (steps, 0), (n, n - steps))
     return live, s, ld
@@ -580,7 +690,8 @@ def _staged_stage_panel(buf, steps: int, k: int, use_kernel=False):
 
 def staged_full(a: jax.Array, *, shrink: float = 0.75, min_size: int = 64,
                 update: str = "rank1", k: int = 32,
-                use_kernel=False):
+                use_kernel=False, fused: bool = False,
+                precision: Optional[str] = None):
     """Geometric shape-staged condensation (§Perf optimization 1).
 
     Runs condensation in stages of static shape, slicing out the live prefix
@@ -592,8 +703,10 @@ def staged_full(a: jax.Array, *, shrink: float = 0.75, min_size: int = 64,
     n = a.shape[0]
     if n <= min_size:
         if update == "panel" and n > k:
-            return blocked_full(a, k=k, use_kernel=use_kernel)
-        return condense_full(a, use_kernel=use_kernel)
+            return blocked_full(a, k=k, use_kernel=use_kernel, fused=fused,
+                                precision=precision)
+        return condense_full(a, use_kernel=use_kernel, fused=fused,
+                             precision=precision)
     parts = []
     buf = a
     for size, steps in stage_schedule(n, shrink, min_size):
@@ -601,21 +714,27 @@ def staged_full(a: jax.Array, *, shrink: float = 0.75, min_size: int = 64,
             raise AssertionError((buf.shape, size))
         if size - steps <= 1:
             if update == "panel" and size > k:
-                parts.append(blocked_full(buf, k=k, use_kernel=use_kernel))
+                parts.append(blocked_full(buf, k=k, use_kernel=use_kernel,
+                                          fused=fused, precision=precision))
             else:
-                parts.append(condense_full(buf, use_kernel=use_kernel))
+                parts.append(condense_full(buf, use_kernel=use_kernel,
+                                           fused=fused, precision=precision))
             buf = None
             break
         if update == "panel" and steps >= k:
-            buf, s, ld = _staged_stage_panel(buf, steps, k, use_kernel)
+            buf, s, ld = _staged_stage_panel(buf, steps, k, use_kernel,
+                                             fused, precision)
         else:
-            buf, s, ld = _staged_stage_rank1(buf, steps)
+            buf, s, ld = _staged_stage_rank1(buf, steps, use_kernel,
+                                             fused, precision)
         parts.append((s, ld))
     if buf is not None:
         if update == "panel" and buf.shape[0] > k:
-            parts.append(blocked_full(buf, k=k, use_kernel=use_kernel))
+            parts.append(blocked_full(buf, k=k, use_kernel=use_kernel,
+                                      fused=fused, precision=precision))
         else:
-            parts.append(condense_full(buf, use_kernel=use_kernel))
+            parts.append(condense_full(buf, use_kernel=use_kernel,
+                                       fused=fused, precision=precision))
     return combine_slogdet(parts)
 
 
@@ -1099,14 +1218,19 @@ def build_serial(cfg: EngineConfig) -> Callable:
 
     if cfg.schedule == "serial":
         if cfg.update == "rank1":
-            return lambda a: condense_full(a, use_kernel=use_kernel)
+            return lambda a: condense_full(a, use_kernel=use_kernel,
+                                           fused=cfg.fused,
+                                           precision=cfg.precision)
         k = cfg.panel_k
-        return lambda a: blocked_full(a, k=k, use_kernel=use_kernel)
+        return lambda a: blocked_full(a, k=k, use_kernel=use_kernel,
+                                      fused=cfg.fused,
+                                      precision=cfg.precision)
 
     # staged
     return lambda a: staged_full(
         a, shrink=cfg.shrink, min_size=cfg.min_size, update=cfg.update,
-        k=cfg.panel_k, use_kernel=use_kernel)
+        k=cfg.panel_k, use_kernel=use_kernel, fused=cfg.fused,
+        precision=cfg.precision)
 
 
 def build_mesh(cfg: EngineConfig, mesh, axis_name: str = "rows", *,
@@ -1121,8 +1245,8 @@ def build_mesh(cfg: EngineConfig, mesh, axis_name: str = "rows", *,
     nproc = int(mesh.shape[axis_name])
     factor_fn = None
     if update_fn is None and gemm_fn is None:
-        update_fn, gemm_fn = _hooks(cfg.backend)
-        if gemm_fn is not None:
+        update_fn, gemm_fn = _hooks(cfg.backend, cfg.precision)
+        if gemm_fn is not None and resolve_backend(cfg.backend) != "xla":
             factor_fn = panel_factor_dispatch(resolve_backend(cfg.backend))
 
     if cfg.update == "rank1":

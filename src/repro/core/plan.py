@@ -182,9 +182,11 @@ def spec_of(x, dtype=None) -> ProblemSpec:
 # --------------------------------------------------------------------------
 
 # panel updates cannot amortize their triangular-solve bookkeeping below a
-# few panels' worth of rows; the selector only offers them above this
+# few panels' worth of rows; the selector only offers them above this.
+# The panel width itself comes from the calibration-driven tile autotuner
+# (repro.kernels.autotune) so the selector prices the geometry the
+# kernels actually run.
 _PANEL_MIN_N_FACTOR = 4
-_DEFAULT_PANEL_K = 32
 # below this modeled exact wall time there is nothing worth trading:
 # Monte-Carlo noise buys ~2-3 digits, so the estimator family only wins
 # when exact condensation is actually expensive
@@ -196,6 +198,7 @@ def select_route(x, *, mesh=None, axis_name: str = "rows",
                  bounds_known: bool = False,
                  est_cols: Optional[int] = None,
                  calibration: Optional[Calibration] = None,
+                 precision: Optional[str] = None,
                  ) -> Tuple[str, Optional[EngineConfig]]:
     """Resolve ``method="auto"`` to a route **tuple**.
 
@@ -204,8 +207,12 @@ def select_route(x, *, mesh=None, axis_name: str = "rows",
     ``("exact", EngineConfig(schedule, update, panel_k, backend))`` — the
     cheapest engine instantiation under the measured calibration table
     (`repro.core.calibration.load_calibration` unless ``calibration`` is
-    given).  Pure and cheap — call it directly to ask "what would the
-    planner do" without building a plan.
+    given), with ``panel_k`` resolved by the tile autotuner.
+    ``precision="bf16"`` prices GEMM work at the bf16 calibration rate
+    and restricts the search to the exact family (the mixed-precision
+    route is an engine feature; estimators have no bf16 path).  Pure and
+    cheap — call it directly to ask "what would the planner do" without
+    building a plan.
     """
     spec = spec_of(x)
     devices = int(mesh.shape[axis_name]) if mesh is not None \
@@ -220,8 +227,12 @@ def select_route(x, *, mesh=None, axis_name: str = "rows",
 
     cal = calibration if calibration is not None else load_calibration()
     itemsize = jnp.dtype(spec.dtype).itemsize
-    route, exact_t = _best_exact_route(spec, devices, cal, itemsize)
+    route, exact_t = _best_exact_route(spec, devices, cal, itemsize,
+                                       precision=precision)
 
+    if precision == "bf16":
+        # the quantized-GEMM route only exists in the exact engine
+        return "exact", route
     if rtol is not None and rtol < _EST_RTOL_FLOOR:
         return "exact", route
 
@@ -249,9 +260,13 @@ def select_method(x, *, mesh=None, axis_name: str = "rows",
 
 
 def _best_exact_route(spec: ProblemSpec, devices: int, cal: Calibration,
-                      itemsize: int) -> Tuple[EngineConfig, float]:
+                      itemsize: int, precision: Optional[str] = None,
+                      ) -> Tuple[EngineConfig, float]:
     """Cheapest exact engine instantiation under the calibration table."""
+    from repro.kernels.autotune import resolved_panel_k
     n, b = spec.n, spec.batch or 1
+    tuned_k = resolved_panel_k(n, itemsize=itemsize, precision=precision,
+                               cal=cal)
     if spec.batch is not None:
         # stacks run one matrix per device (vmapped serial schedule)
         candidates = [("serial", "rank1", 1, False),
@@ -268,19 +283,20 @@ def _best_exact_route(spec: ProblemSpec, devices: int, cal: Calibration,
                            ("mesh", "panel", devices, False),
                            ("mesh", "rank1", devices, True),
                            ("mesh", "panel", devices, True)]
-    if n < _PANEL_MIN_N_FACTOR * _DEFAULT_PANEL_K:
+    if n < _PANEL_MIN_N_FACTOR * tuned_k:
         candidates = [c for c in candidates if c[1] != "panel"]
 
     def cost_of(c):
         schedule, update, devs, la = c
         return exact_cost(n, devs, cal, update=update,
-                          panel_k=_DEFAULT_PANEL_K, itemsize=itemsize,
-                          batch=b, lookahead=la)
+                          panel_k=tuned_k, itemsize=itemsize,
+                          batch=b, lookahead=la, precision=precision)
 
     best = min(candidates, key=cost_of)
     schedule, update, devs, la = best
     return EngineConfig(schedule=schedule, update=update,
-                        panel_k=_DEFAULT_PANEL_K, lookahead=la), cost_of(best)
+                        panel_k=tuned_k, lookahead=la,
+                        precision=precision), cost_of(best)
 
 
 def _flops_est(method: str, spec: ProblemSpec, cfg: LogdetConfig,
@@ -756,6 +772,19 @@ class LogdetPlan:
             + (f", backward cg_iters={d.cg_iters}"
                if d.cg_iters is not None else ""),
         ]
+        if self.method == "exact" and isinstance(self.config, ExactConfig):
+            from repro.kernels.autotune import tile_config
+            prec = self.config.precision
+            tiles = tile_config(spec.n,
+                                itemsize=jnp.dtype(spec.dtype).itemsize,
+                                precision=prec)
+            lines.insert(3, f"  precision: {prec or 'native'}"
+                         + (" (bf16 GEMM operands, full-precision "
+                            "accumulators)" if prec == "bf16" else ""))
+            lines.insert(4, f"  tiles[{tiles.source}]: "
+                         f"panel_k={self.config.k} "
+                         f"(autotuned {tiles.panel_k}), "
+                         f"block={tiles.block_m}x{tiles.block_n}")
         conv = self._cache.get("last_convergence")
         if conv:
             lines.append("  last convergence (REPRO_OBS=trace):")
@@ -869,6 +898,10 @@ def plan(x, *, method: str = "auto", mesh=None, axis_name: str = "rows",
     ``mesh``       1-D device mesh for the distributed paths (parallel
                    condensation / row-sharded estimator matvecs).
     ``precision``  dtype override (e.g. ``"float32"``); inputs are cast.
+                   ``"bf16"``/``"bfloat16"`` is different: it selects the
+                   mixed-precision ENGINE route (bf16 GEMM operands,
+                   full-precision accumulators — exact family only); the
+                   input dtype is untouched.
     ``grad``       pre-build the ``value_and_grad`` executable now rather
                    than on first use.
     ``config``     an explicit typed config (`ExactConfig` |
@@ -890,8 +923,16 @@ def plan(x, *, method: str = "auto", mesh=None, axis_name: str = "rows",
     equal spec + method + config + mesh reuse one compiled executable
     (this cache is what makes the deprecated string API non-retracing).
     """
+    engine_precision = None
+    if precision in ("bf16", "bfloat16"):
+        # mixed-precision engine route, NOT a storage-dtype cast: the
+        # buffer and all sign/parity/log accumulators keep the input
+        # dtype; only GEMM/outer operands are quantized (docs/api.md)
+        engine_precision = "bf16"
+        precision = None
     spec = spec_of(x, dtype=precision)
-    if precision is not None and spec.kind == "operator":
+    if (precision is not None or engine_precision is not None) \
+            and spec.kind == "operator":
         raise ValueError("precision overrides apply to array inputs; "
                          "cast the operator's parameters instead")
     if precision is not None:
@@ -915,14 +956,18 @@ def plan(x, *, method: str = "auto", mesh=None, axis_name: str = "rows",
                     else kwargs.get("num_steps", 25) * probes + _BOUNDS_COLS)
         method, route = select_route(spec, mesh=mesh, axis_name=axis_name,
                                      rtol=rtol, bounds_known=bounds_known,
-                                     est_cols=est_cols)
+                                     est_cols=est_cols,
+                                     precision=engine_precision)
         # the resolved family keeps its own knobs; the other family's are
         # dropped (typo-only names still raise inside the filter)
         kwargs = _filter_for_method(method, kwargs)
         if route is not None:
-            # the selector's engine tuple, user-supplied axes winning
+            # the selector's engine tuple, user-supplied axes winning;
+            # panel_k is the autotuned width exact_cost priced, so auto
+            # RUNS the geometry it modeled
             kwargs.setdefault("schedule", route.schedule)
             kwargs.setdefault("update", route.update)
+            kwargs.setdefault("k", route.panel_k)
             if route.schedule == "mesh":
                 kwargs.setdefault("lookahead", route.lookahead)
     elif method in LEGACY_EXACT_ROUTES:
@@ -965,6 +1010,18 @@ def plan(x, *, method: str = "auto", mesh=None, axis_name: str = "rows",
         cfg = validate_config(method, config)
     else:
         cfg = config_for(method, kwargs)
+    if engine_precision is not None:
+        if method != "exact":
+            raise ValueError(
+                f"precision='bf16' is the condensation engine's "
+                f"mixed-precision route; method {method!r} has no "
+                "quantized-GEMM path (use method='exact' or 'auto')")
+        got = cfg.precision
+        if got not in (None, engine_precision):
+            raise ValueError(
+                f"precision='bf16' conflicts with config precision "
+                f"{got!r}")
+        cfg = dataclasses.replace(cfg, precision=engine_precision)
     if method == "exact":
         cfg = cfg.resolved(mesh_present=mesh is not None)
 

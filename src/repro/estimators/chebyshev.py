@@ -28,7 +28,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.estimators.hutchinson import TraceEstimate, make_probes, mean_sem
-from repro.estimators.operators import as_operator
+from repro.estimators.operators import DenseOperator, as_operator
+from repro.kernels import ops as _kops
 from repro.obs import telemetry as _telemetry
 
 __all__ = ["spectral_bounds", "chebyshev_coeffs_log", "logdet_chebyshev"]
@@ -134,12 +135,25 @@ def logdet_chebyshev(a, *, degree: int = 64, num_probes: int = 32,
     samples = (c[..., 0, None] * (v * v).sum(-2)
                + c[..., 1, None] * (v * w).sum(-2))       # (..., k)
 
-    def body(j, carry):
-        w_prev, w, samples = carry
-        w_next = 2.0 * mv_b(w) - w_prev
-        cj = jnp.take(c, j, axis=-1)[..., None]
-        samples = samples + cj * (v * w_next).sum(-2)
-        return w, w_next, samples
+    if isinstance(op, DenseOperator):
+        # dense operators take the fused three-term kernel: shifted
+        # matvec + axpy + probe dot in one pass over A (op-for-op the
+        # unfused body below, so f32 results are bit-identical; the
+        # dispatch layer falls back to the identical jnp reference when
+        # A exceeds the VMEM budget or off-TPU)
+        def body(j, carry):
+            w_prev, w, samples = carry
+            w_next, dots = _kops.fused_cheb_step(op.a, w, w_prev, v,
+                                                 center, width)
+            cj = jnp.take(c, j, axis=-1)[..., None]
+            return w, w_next, samples + cj * dots
+    else:
+        def body(j, carry):
+            w_prev, w, samples = carry
+            w_next = 2.0 * mv_b(w) - w_prev
+            cj = jnp.take(c, j, axis=-1)[..., None]
+            samples = samples + cj * (v * w_next).sum(-2)
+            return w, w_next, samples
 
     _, _, samples = lax.fori_loop(2, degree + 1, body, (w_prev, w, samples))
     est, sem = mean_sem(samples)

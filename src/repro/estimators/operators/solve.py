@@ -70,9 +70,17 @@ def cg_solve(a, b, *, tol: float = 1e-10, atol: float = 0.0,
     Returns a `CGResult`; ``converged`` is a traced bool — check it (or
     ``resnorm``) rather than assuming ``maxiter`` sufficed.
     """
-    from repro.estimators.operators import as_operator  # lazy: package cycle
+    from repro.estimators.operators import (  # lazy: package cycle
+        DenseOperator, as_operator)
     op = as_operator(a)
     mm = op.rmm if transpose else op.mm
+    # dense forward solves take the fused matvec+axpy+dot kernel (one
+    # pass over A per iteration); rmm has no fused form, and the
+    # dispatch layer falls back to the identical jnp reference when A
+    # exceeds the VMEM budget or off-TPU — either way op-for-op the
+    # inline chain below, so results are bit-identical
+    fused_a = op.a if (isinstance(op, DenseOperator)
+                       and not transpose) else None
     n = op.shape[-1]
     if maxiter is None:
         maxiter = 10 * n
@@ -115,10 +123,14 @@ def cg_solve(a, b, *, tol: float = 1e-10, atol: float = 0.0,
 
     def body(state):
         x, r, p, rz, it = state
-        ap = mm(p)
-        alpha = _safe_div(rz, (p * ap).sum(-2))[..., None, :]
-        x = x + alpha * p
-        r = r - alpha * ap
+        if fused_a is not None:
+            from repro.kernels import ops as _kops
+            x, r = _kops.fused_cg_step(fused_a, p, x, r, rz)
+        else:
+            ap = mm(p)
+            alpha = _safe_div(rz, (p * ap).sum(-2))[..., None, :]
+            x = x + alpha * p
+            r = r - alpha * ap
         z = apply_minv(r)
         rz_new = (r * z).sum(-2)
         beta = _safe_div(rz_new, rz)[..., None, :]

@@ -28,17 +28,23 @@ import os
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro import obs
+from repro.kernels import autotune as _autotune
 from repro.kernels import ref as _ref
 from repro.kernels.condense_step import rank1_update_pallas
+from repro.kernels.fused_est import (VMEM_BUDGET as _EST_VMEM_BUDGET,
+                                     cg_step_pallas, cheb_step_pallas)
+from repro.kernels.fused_step import fused_step_pallas
 from repro.kernels.matvec import matvec_pallas
 from repro.kernels.panel_factor import panel_factor_pallas
 from repro.kernels.panel_update import panel_update_pallas
 from repro.kernels.stencil_mv import stencil_mv_pallas
 
 __all__ = ["rank1_update", "panel_update", "panel_factor_vmem", "matvec",
-           "stencil_mv", "kernel_backend", "on_tpu", "KERNEL_BACKENDS"]
+           "stencil_mv", "fused_condense_step", "fused_cheb_step",
+           "fused_cg_step", "kernel_backend", "on_tpu", "KERNEL_BACKENDS"]
 
 KERNEL_BACKENDS = ("xla", "pallas", "interpret")
 _ENV_VAR = "REPRO_KERNEL_BACKEND"
@@ -76,27 +82,143 @@ def kernel_backend() -> str:
     return "pallas" if on_tpu() else "xla"
 
 
+def _quantize(precision: Optional[str], *operands):
+    """Cast GEMM/outer-product operands for a mixed-precision route.
+
+    ``precision="bf16"`` quantizes the multiply operands to bfloat16;
+    products accumulate back into the buffer dtype downstream (the
+    kernels and references all ``astype`` the contraction result), so
+    sign / parity / log accumulators never leave full precision.
+    """
+    if precision is None:
+        return operands
+    if precision != "bf16":
+        raise ValueError(f"unknown precision {precision!r}; "
+                         "one of (None, 'bf16')")
+    return tuple(o.astype(jnp.bfloat16) for o in operands)
+
+
 def rank1_update(a: jax.Array, pc: jax.Array, pr: jax.Array, *,
-                 backend: Optional[str] = None, **kw) -> jax.Array:
+                 backend: Optional[str] = None,
+                 precision: Optional[str] = None, **kw) -> jax.Array:
     """Fused a -= outer(pc, pr); backend per `_dispatch`."""
     b = _dispatch(backend)
     obs.inc("kernel.dispatch", op="rank1_update", backend=b)
+    pc, pr = _quantize(precision, pc, pr)
     with obs.stage("kernel.rank1_update", backend=b):
         if b == "xla":
-            return _ref.rank1_update_ref(a, pc, pr)
+            return _ref.rank1_update_ref(a, pc, pr).astype(a.dtype)
         return rank1_update_pallas(a, pc, pr, interpret=b == "interpret",
                                    **kw)
 
 
 def panel_update(a: jax.Array, c: jax.Array, r: jax.Array, *,
-                 backend: Optional[str] = None, **kw) -> jax.Array:
+                 backend: Optional[str] = None,
+                 precision: Optional[str] = None, **kw) -> jax.Array:
     """Fused a -= c @ r; backend per `_dispatch`."""
     b = _dispatch(backend)
     obs.inc("kernel.dispatch", op="panel_update", backend=b)
+    c, r = _quantize(precision, c, r)
     with obs.stage("kernel.panel_update", backend=b):
         if b == "xla":
-            return _ref.panel_update_ref(a, c, r)
+            return _ref.panel_update_ref(a, c, r).astype(a.dtype)
         return panel_update_pallas(a, c, r, interpret=b == "interpret", **kw)
+
+
+def fused_condense_step(buf: jax.Array, t, *,
+                        backend: Optional[str] = None,
+                        precision: Optional[str] = None):
+    """One-pass condensation step at pivot row ``t``.
+
+    Fuses pivot argmax (§2.2), the §2.4 column-swap bookkeeping, and the
+    rank-1 update into a single pass over the buffer, replacing the
+    engine's three-pass scatter-swap + outer-subtract sequence.  Returns
+    ``(buf', l, p)`` — the updated buffer plus the chosen pivot column
+    and pivot value for the caller's sign/parity/log bookkeeping (which
+    stays in the buffer dtype; ``precision="bf16"`` quantizes only the
+    rank-1 operands).
+
+    The O(n) pivot-row bookkeeping (argmax, normalization) runs inline —
+    it touches one row; the O(n^2) swap+update is the fused pass
+    (`kernels.fused_step` or the bit-identical jnp select reference).
+    """
+    b = _dispatch(backend)
+    obs.inc("kernel.dispatch", op="fused_condense_step", backend=b)
+    n = buf.shape[0]
+    cols = jnp.arange(n)
+    m = n - t                       # live size (t may be traced)
+    last = m - 1
+    row = buf[t]
+    absrow = jnp.where(cols < m, jnp.abs(row), -jnp.inf)
+    l = jnp.argmax(absrow)
+    p = row[l]
+    col_l = buf[:, l]
+    col_last = buf[:, last]
+    # pivot row in swapped coordinates, normalized so pr[last] == 1
+    row = row.at[l].set(row[last])
+    row = row.at[last].set(p)
+    safe_p = jnp.where(p == 0, jnp.ones((), buf.dtype), p)
+    pr = jnp.where(p == 0, jnp.zeros_like(row), row / safe_p)
+    # pivot column, zeroed at the pivot row and the dead rows above it
+    pc = col_l.at[t].set(0.0)
+    pc = jnp.where(cols < t, 0.0, pc)
+    pc, pr = _quantize(precision, pc, pr)
+    with obs.stage("kernel.fused_step", backend=b):
+        if b == "xla":
+            out = _ref.fused_step_ref(buf, l, last, pc, pr, col_l, col_last)
+        else:
+            tiles = _autotune.tile_config(
+                n, itemsize=buf.dtype.itemsize, precision=precision)
+            out = fused_step_pallas(buf, l, last, pc, pr, col_l, col_last,
+                                    bm=tiles.block_m, bn=tiles.block_n,
+                                    interpret=b == "interpret")
+    return out, l, p
+
+
+def _est_fits_vmem(a: jax.Array, k: int) -> bool:
+    n = a.shape[-1]
+    return (n * n + 4 * n * k) * a.dtype.itemsize <= _EST_VMEM_BUDGET
+
+
+def fused_cheb_step(a: jax.Array, w: jax.Array, w_prev: jax.Array,
+                    v: jax.Array, center, width, *,
+                    backend: Optional[str] = None):
+    """Fused Chebyshev three-term step: one pass over ``a`` per degree.
+
+    Returns ``(w_next, dots)`` with ``w_next = 2 * (2 a w - c w)/width -
+    w_prev`` and ``dots = (v * w_next).sum(-2)`` — op-for-op the unfused
+    loop body, so f32 results are bit-identical.  Oversized operands
+    (A + slabs beyond the VMEM budget) fall back to the identical jnp
+    reference rather than a partial kernel.
+    """
+    b = _dispatch(backend)
+    if b != "xla" and (a.ndim != 2 or not _est_fits_vmem(a, w.shape[-1])):
+        b = "xla"
+    obs.inc("kernel.dispatch", op="fused_cheb_step", backend=b)
+    with obs.stage("kernel.fused_cheb_step", backend=b):
+        if b == "xla":
+            return _ref.cheb_step_ref(a, w, w_prev, v, center, width)
+        return cheb_step_pallas(a, w, w_prev, v, center, width,
+                                interpret=b == "interpret")
+
+
+def fused_cg_step(a: jax.Array, p: jax.Array, x: jax.Array, r: jax.Array,
+                  rz: jax.Array, *, backend: Optional[str] = None):
+    """Fused CG matvec+axpy+dot chain: one pass over ``a`` per iteration.
+
+    Returns ``(x_new, r_new)`` for ``ap = a p; alpha = rz / (p . ap)``
+    (guarded 0/0 -> 0), ``x += alpha p; r -= alpha ap`` — op-for-op the
+    unfused `operators.solve` loop body.  Oversized operands fall back
+    to the identical jnp reference.
+    """
+    b = _dispatch(backend)
+    if b != "xla" and (a.ndim != 2 or not _est_fits_vmem(a, p.shape[-1])):
+        b = "xla"
+    obs.inc("kernel.dispatch", op="fused_cg_step", backend=b)
+    with obs.stage("kernel.fused_cg_step", backend=b):
+        if b == "xla":
+            return _ref.cg_step_ref(a, p, x, r, rz)
+        return cg_step_pallas(a, p, x, r, rz, interpret=b == "interpret")
 
 
 def matvec(a: jax.Array, x: jax.Array, *, backend: Optional[str] = None,

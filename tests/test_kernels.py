@@ -238,3 +238,269 @@ def test_engine_backend_pallas_through_env(monkeypatch, rng):
         s, ld = engine_slogdet(jnp.asarray(a), cfg)
         assert float(s) == pytest.approx(s_ref), update
         np.testing.assert_allclose(float(ld), ld_ref, rtol=1e-9)
+
+
+# ------------------------------------------------- fused one-pass step
+
+from repro.kernels import autotune
+from repro.kernels.fused_step import fused_step_pallas
+from repro.kernels.fused_est import cg_step_pallas, cheb_step_pallas
+
+ODD_N = [7, 37, 129, 200]
+
+
+def _scatter_step_oracle(a, l, last, pc, pr):
+    """The engine's historical three-pass sequence: scatter column swap,
+    then outer-product subtract — the arithmetic the fused pass must
+    reproduce bit for bit (the swap is pure data movement)."""
+    col_l, col_last = a[:, l], a[:, last]
+    sw = a.at[:, l].set(col_last).at[:, last].set(col_l)
+    return sw - np.multiply.outer(np.asarray(pc), np.asarray(pr)).astype(
+        np.asarray(a).dtype)
+
+
+@pytest.mark.parametrize("n", ODD_N)
+@pytest.mark.parametrize("dt", DTYPES)
+def test_fused_step_matches_scatter_sequence(n, dt, rng):
+    """fused select-pass == scatter swap + rank-1, bitwise (both refs and
+    the interpret-mode Pallas body)."""
+    a = jnp.asarray(rng.standard_normal((n, n)), dt)
+    pc = jnp.asarray(rng.standard_normal((n,)), dt)
+    pr = jnp.asarray(rng.standard_normal((n,)), dt)
+    l, last = min(3, n - 1), n - 1
+    want = _scatter_step_oracle(a, l, last, pc, pr)
+    got_ref = ref.fused_step_ref(a, l, last, pc, pr, a[:, l], a[:, last])
+    np.testing.assert_array_equal(np.asarray(got_ref), np.asarray(want))
+    # the Pallas body executes under jit, where XLA contracts the
+    # multiply-subtract into an FMA — compare against the jitted ref
+    # (the form the engine actually traces), which IS bitwise
+    got_pal = fused_step_pallas(a, jnp.int32(l), jnp.int32(last), pc, pr,
+                                a[:, l], a[:, last], interpret=True)
+    want_jit = jax.jit(ref.fused_step_ref)(a, jnp.int32(l), jnp.int32(last),
+                                           pc, pr, a[:, l], a[:, last])
+    np.testing.assert_array_equal(np.asarray(got_pal), np.asarray(want_jit))
+
+
+@pytest.mark.parametrize("bm,bn", [(8, 128), (64, 64), (256, 512)])
+def test_fused_step_block_shape_invariant(bm, bn, rng):
+    """Result must not depend on the autotuner's tile choice."""
+    n = 150
+    a = jnp.asarray(rng.standard_normal((n, n)), np.float32)
+    pc = jnp.asarray(rng.standard_normal((n,)), np.float32)
+    pr = jnp.asarray(rng.standard_normal((n,)), np.float32)
+    want = jax.jit(ref.fused_step_ref)(a, jnp.int32(5), jnp.int32(n - 1),
+                                       pc, pr, a[:, 5], a[:, n - 1])
+    got = fused_step_pallas(a, jnp.int32(5), jnp.int32(n - 1), pc, pr,
+                            a[:, 5], a[:, n - 1], bm=bm, bn=bn,
+                            interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+def test_fused_condense_step_backends_agree(backend, rng):
+    """ops.fused_condense_step: identical (buf', l, p) across backends at
+    a non-tile-multiple N, mid-condensation t."""
+    n = 37
+    buf = jnp.asarray(rng.standard_normal((n, n)), np.float32)
+    # jit both legs: eager-vs-jit differs by one FMA contraction, and the
+    # engine only ever runs this step inside a jitted condensation loop
+    step = {
+        be: jax.jit(lambda b, t, be=be: ops.fused_condense_step(
+            b, t, backend=be), static_argnums=1)
+        for be in ("xla", backend)}
+    for t in (0, 3, n - 2):
+        b1, l1, p1 = step["xla"](buf, t)
+        b2, l2, p2 = step[backend](buf, t)
+        np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
+        assert int(l1) == int(l2) and float(p1) == float(p2)
+
+
+def test_fused_condense_step_zero_pivot_row(rng):
+    """An all-zero live row must produce p == 0 and a zero pr (no NaNs) —
+    the singular-input guard the unfused engine step carries."""
+    n = 9
+    buf = jnp.asarray(rng.standard_normal((n, n)), np.float32)
+    buf = buf.at[0].set(0.0)
+    out, l, p = ops.fused_condense_step(buf, 0, backend="xla")
+    assert float(p) == 0.0
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_fused_condense_step_bf16_error_model(rng):
+    """precision='bf16' quantizes only the rank-1 operands: the result
+    stays in the buffer dtype and within the documented bf16 error model
+    (|err| <= ~2^-8 * |pc||pr| elementwise against the f32 step)."""
+    n = 64
+    buf = jnp.asarray(rng.standard_normal((n, n)), np.float32)
+    exact, l1, p1 = ops.fused_condense_step(buf, 2, backend="xla")
+    quant, l2, p2 = ops.fused_condense_step(buf, 2, backend="xla",
+                                            precision="bf16")
+    assert quant.dtype == buf.dtype
+    assert int(l1) == int(l2) and float(p1) == float(p2)  # pivot is exact
+    scale = (np.abs(np.asarray(buf)).max() ** 2) / abs(float(p1))
+    err = np.abs(np.asarray(quant) - np.asarray(exact)).max()
+    assert err <= 2.0 ** -8 * scale * 4, (err, scale)
+
+
+# ------------------------------------------------- fused estimator steps
+
+@pytest.mark.parametrize("shape", [(8, 3), (37, 5), (130, 7)])
+def test_cheb_step_pallas_matches_ref(shape, rng):
+    n, k = shape
+    a = jnp.asarray(rng.standard_normal((n, n)), np.float32)
+    w = jnp.asarray(rng.standard_normal((n, k)), np.float32)
+    wp = jnp.asarray(rng.standard_normal((n, k)), np.float32)
+    v = jnp.asarray(rng.standard_normal((n, k)), np.float32)
+    wn1, d1 = cheb_step_pallas(a, w, wp, v, 1.7, 3.1, interpret=True)
+    wn2, d2 = jax.jit(ref.cheb_step_ref)(a, w, wp, v,
+                                         jnp.float32(1.7), jnp.float32(3.1))
+    np.testing.assert_array_equal(np.asarray(wn1), np.asarray(wn2))
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+
+
+@pytest.mark.parametrize("shape", [(8, 3), (37, 5), (130, 7)])
+def test_cg_step_pallas_matches_ref(shape, rng):
+    """Bitwise against the jitted unfused chain (the form the engine's
+    while_loop traces; eager numpy differs by one FMA contraction)."""
+    n, k = shape
+    a = jnp.asarray(rng.standard_normal((n, n)), np.float32)
+    p = jnp.asarray(rng.standard_normal((n, k)), np.float32)
+    x = jnp.asarray(rng.standard_normal((n, k)), np.float32)
+    r = jnp.asarray(rng.standard_normal((n, k)), np.float32)
+    rz = jnp.asarray(rng.standard_normal((k,)), np.float32)
+    x1, r1 = cg_step_pallas(a, p, x, r, rz, interpret=True)
+    x2, r2 = jax.jit(ref.cg_step_ref)(a, p, x, r, rz)
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+
+
+def test_cg_step_converged_columns_take_noops():
+    """Zero search direction (a converged column) must produce alpha == 0
+    exactly, not NaN — the guarded 0/0 the solver relies on."""
+    n, k = 16, 3
+    a = jnp.eye(n, dtype=jnp.float32)
+    p = jnp.zeros((n, k), jnp.float32)
+    x = jnp.ones((n, k), jnp.float32)
+    r = jnp.ones((n, k), jnp.float32)
+    rz = jnp.ones((k,), jnp.float32)
+    x1, r1 = cg_step_pallas(a, p, x, r, rz, interpret=True)
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r))
+
+
+def test_fused_est_oversized_falls_back_to_ref(monkeypatch, rng):
+    """Operands beyond the VMEM budget must take the identical jnp
+    reference, not a partial kernel (and never error)."""
+    import repro.kernels.ops as ops_mod
+    monkeypatch.setattr(ops_mod, "_EST_VMEM_BUDGET", 64)   # nothing fits
+    calls = []
+    monkeypatch.setattr(ops_mod, "cheb_step_pallas",
+                        lambda *a, **k: calls.append("pallas"))
+    a = jnp.asarray(rng.standard_normal((16, 16)), np.float32)
+    w = jnp.asarray(rng.standard_normal((16, 2)), np.float32)
+    wn, d = ops_mod.fused_cheb_step(a, w, w, w, 1.0, 2.0,
+                                    backend="interpret")
+    assert not calls, "oversized operands must not reach the kernel"
+    wn_ref, d_ref = ref.cheb_step_ref(a, w, w, w, 1.0, 2.0)
+    np.testing.assert_array_equal(np.asarray(wn), np.asarray(wn_ref))
+
+
+def test_fused_estimators_integrate(rng):
+    """End to end: dense chebyshev / cg_solve (fused loop bodies) equal
+    the unfused operator path bit for bit."""
+    from repro.estimators.chebyshev import logdet_chebyshev
+    from repro.estimators.operators import cg_solve
+
+    n = 48
+    m = rng.standard_normal((n, n)).astype(np.float32)
+    a = jnp.asarray(m @ m.T + n * np.eye(n, dtype=np.float32))
+
+    class Unfused:          # duck-typed operator: misses the dense gate
+        def __init__(self, a):
+            self.a, self.shape, self.dtype = a, a.shape, a.dtype
+
+        def mm(self, v):
+            return self.a @ v
+
+        mv = mm
+
+        def diag(self):
+            return jnp.diagonal(self.a)
+
+        def trace_hint(self):
+            return jnp.trace(self.a)
+
+    rf = logdet_chebyshev(a, degree=16, num_probes=4, seed=3)
+    ru = logdet_chebyshev(Unfused(a), degree=16, num_probes=4, seed=3)
+    np.testing.assert_array_equal(np.asarray(rf.est), np.asarray(ru.est))
+
+    b = jnp.asarray(rng.standard_normal((n, 4)), jnp.float32)
+    sf = cg_solve(a, b, tol=1e-6)
+    su = cg_solve(Unfused(a), b, tol=1e-6)
+    np.testing.assert_array_equal(np.asarray(sf.x), np.asarray(su.x))
+    assert int(sf.iters) == int(su.iters)
+    assert bool(sf.converged)
+
+
+# ------------------------------------------------- tile autotuner
+
+def test_autotune_deterministic_and_cached():
+    autotune.clear_autotune_cache()
+    t1 = autotune.tile_config(512, itemsize=4)
+    t2 = autotune.tile_config(512, itemsize=4)
+    assert t1 == t2
+    assert t1.panel_k in autotune.PANEL_K_CANDIDATES
+    assert t1.source.startswith(("model", "env", "off"))
+
+
+def test_autotune_panel_k_grows_with_n():
+    """The model's k* ~ sqrt(n * gemm/stream): wider panels amortize
+    more GEMM per byte streamed as N grows."""
+    autotune.clear_autotune_cache()
+    ks = [autotune.resolved_panel_k(n, itemsize=8)
+          for n in (64, 512, 4096)]
+    assert ks == sorted(ks), ks
+    assert all(k <= max(8, (1 << (n - 1).bit_length()) // 4)
+               for k, n in zip(ks, (64, 512, 4096)))
+
+
+def test_autotune_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE", "panel_k=16,block_m=128,block_n=256")
+    autotune.clear_autotune_cache()
+    t = autotune.tile_config(1024)
+    assert (t.panel_k, t.block_m, t.block_n) == (16, 128, 256)
+    assert t.source == "env"
+    monkeypatch.setenv("REPRO_AUTOTUNE", "off")
+    autotune.clear_autotune_cache()
+    assert autotune.tile_config(1024).source == "off"
+    monkeypatch.setenv("REPRO_AUTOTUNE", "warp=9")
+    autotune.clear_autotune_cache()
+    with pytest.raises(ValueError, match="REPRO_AUTOTUNE"):
+        autotune.tile_config(1024)
+    monkeypatch.delenv("REPRO_AUTOTUNE")
+    autotune.clear_autotune_cache()
+
+
+def test_autotune_prices_bf16_separately():
+    """A table with a faster bf16 GEMM rate must shift the modeled
+    crossover: bf16 never picks a WIDER panel than native at equal
+    stream cost, and an extreme bf16 rate drives k down."""
+    from repro.core.calibration import Calibration
+    cal = Calibration(gemm_flops=1e11, stream_bytes=1e10,
+                      gemm_flops_bf16=1e14)
+    k_native = autotune.resolved_panel_k(2048, itemsize=8, cal=cal)
+    k_bf16 = autotune.resolved_panel_k(2048, itemsize=8, precision="bf16",
+                                       cal=cal)
+    assert k_bf16 <= k_native
+
+
+def test_exact_cost_resolves_panel_k_through_autotuner():
+    from repro.core.calibration import exact_cost, load_calibration
+    cal = load_calibration()
+    n = 1024
+    k = autotune.resolved_panel_k(n, itemsize=8, cal=cal)
+    assert exact_cost(n, 1, cal, update="panel") == \
+        exact_cost(n, 1, cal, update="panel", panel_k=k)
+    # bf16 prices the GEMM term at the bf16 rate: strictly cheaper
+    assert exact_cost(n, 1, cal, update="panel", precision="bf16") < \
+        exact_cost(n, 1, cal, update="panel")

@@ -98,8 +98,12 @@ def test_auto_resolves_route_tuples_not_strings():
     family — and the tuple's axes respond to the problem shape."""
     m, route = select_route((64, 64))
     assert m == "exact" and isinstance(route, EngineConfig)
-    # too small for rank-K panels to amortize: rank-1 updates
-    assert route.update == "rank1" and route.schedule in ("serial", "staged")
+    # small N: the autotuner narrows panels (k=8) so rank-K updates
+    # amortize even here — fixed-width 32 used to force rank-1
+    assert route.update in ("rank1", "panel")
+    assert route.schedule in ("serial", "staged")
+    if route.update == "panel":
+        assert route.panel_k <= 16, route.panel_k
     # large single-device exact work rides the MXU: panel updates
     m2, route2 = select_route((2048, 2048), rtol=1e-9)
     assert m2 == "exact" and route2.update == "panel"
@@ -688,3 +692,69 @@ def test_plan_hints_advertised_by_all_backends():
             < cases["dense"].plan_hints().matvec_flops)
     assert cases["dense"].plan_hints().materializable
     assert not cases["kron"].plan_hints().materializable
+
+
+# ------------------------------------------- bf16 route + tile autotuning
+
+def test_plan_bf16_is_engine_route_not_storage_cast():
+    """precision='bf16' selects the mixed-precision engine route: the
+    spec keeps its storage dtype, the config carries precision='bf16',
+    and the result stays within the engine's documented error model."""
+    a = jnp.asarray(make_spd(64, 0), jnp.float32)
+    p = repro.plan(a, method="exact", precision="bf16")
+    assert p.method == "exact"
+    assert p.spec.dtype == "float32"          # storage untouched
+    assert p.config.precision == "bf16"
+    r = p(a)
+    s_ref, ld_ref = np.linalg.slogdet(np.asarray(a))
+    assert float(r.sign) == s_ref
+    assert abs(float(r.logabsdet) - ld_ref) / abs(ld_ref) < 5e-3
+
+
+def test_plan_bf16_rejects_estimators_and_conflicts():
+    a = jnp.asarray(make_spd(64, 1), jnp.float32)
+    with pytest.raises(ValueError, match="mixed-precision"):
+        repro.plan(a, method="slq", precision="bf16")
+    with pytest.raises(ValueError, match="mixed-precision"):
+        repro.plan(a, method="chebyshev", precision="bf16", degree=8)
+    # an explicit matching config precision merges cleanly
+    p = repro.plan(a, method="exact", precision="bf16",
+                   config=ExactConfig(precision="bf16"))
+    assert p.config.precision == "bf16"
+    # and a bare config carries the route without the top-level kwarg
+    p2 = repro.plan(a, method="exact", config=ExactConfig(precision="bf16"))
+    assert p2.config.precision == "bf16"
+
+
+def test_select_route_prices_bf16_separately():
+    """bf16 restricts auto to the exact family and prices its GEMM term
+    at the calibrated bf16 rate through the autotuner."""
+    m, route = select_route((2048, 2048), precision="bf16")
+    assert m == "exact" and route.precision == "bf16"
+    # a size where native auto would hand off to estimators stays exact
+    m2, route2 = select_route((8192, 8192), precision="bf16")
+    assert m2 == "exact" and route2 is not None
+
+
+def test_auto_runs_the_panel_k_it_priced():
+    """The auto path must execute the autotuned panel width exact_cost
+    modeled — cfg.k == route.panel_k, no fixed-32 drift."""
+    n = 512
+    m, route = select_route((n, n))
+    assert m == "exact"
+    a = jnp.asarray(make_spd(n, 2))
+    p = repro.plan(a, method="auto")
+    if p.method == "exact":
+        assert p.config.k == route.panel_k
+    from repro.kernels.autotune import resolved_panel_k
+    assert route.panel_k == resolved_panel_k(
+        n, itemsize=8, precision=None)
+
+
+def test_explain_reports_precision_and_tiles():
+    a = jnp.asarray(make_spd(64, 3), jnp.float32)
+    text = repro.plan(a, method="exact", precision="bf16").explain()
+    assert "precision: bf16" in text
+    assert "tiles[" in text and "panel_k=" in text
+    native = repro.plan(a, method="exact").explain()
+    assert "precision: native" in native
